@@ -1,0 +1,58 @@
+"""Kernel microbenches: interpret-mode wall time (semantic check only — the
+TPU target numbers are the §Roofline model terms) plus the XLA-path
+oracle timing for reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_reference
+from repro.kernels.window_agg import window_aggregate, window_aggregate_reference
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(csv_rows):
+    print("\n== kernel microbench (CPU: interpret-mode vs jnp oracle) ==")
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    q = jax.random.normal(ks[0], (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+    t_k = _time(flash_attention, q, k, v, interpret=True)
+    t_r = _time(attention_reference, q, k, v)
+    print(f"flash_attention 512x512 GQA: kernel {t_k:9.0f}us  oracle {t_r:9.0f}us")
+    csv_rows.append(("flash_attention_512", t_k, f"oracle={t_r:.0f}us"))
+
+    x = jax.random.normal(ks[3], (14400, 128), jnp.float32)
+    t_k = _time(window_aggregate, x, agg="max", window=180, stride=60,
+                interpret=True)
+    t_r = _time(window_aggregate_reference, x, agg="max", window=180,
+                stride=60, iters=1)
+    print(f"window_agg 14400x128 w180/s60: kernel {t_k:7.0f}us  oracle {t_r:9.0f}us")
+    csv_rows.append(("window_agg_day", t_k, f"oracle={t_r:.0f}us"))
+
+    xs = jax.random.normal(ks[4], (1, 512, 4, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(ks[1], (4,)) * 0.5)
+    B_ = jax.random.normal(ks[2], (1, 512, 1, 128)) * 0.3
+    C = jax.random.normal(ks[3], (1, 512, 1, 128)) * 0.3
+    t_k = _time(ssd_scan, xs, dt, A, B_, C, interpret=True)
+    t_r = _time(ssd_scan_reference, xs, dt, A, B_, C)
+    print(f"ssd_scan 512 L, H4 P64 N128:  kernel {t_k:9.0f}us  oracle {t_r:9.0f}us")
+    csv_rows.append(("ssd_scan_512", t_k, f"oracle={t_r:.0f}us"))
+
+
+if __name__ == "__main__":
+    main([])

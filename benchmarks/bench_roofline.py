@@ -1,0 +1,38 @@
+"""Roofline table from recorded dry-run reports (results/dryrun/*.json) —
+the §Roofline deliverable rendered as a benchmark."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import roofline as RL
+
+
+def load_reports(report_dir="results/dryrun"):
+    reps = []
+    for fn in sorted(glob.glob(os.path.join(report_dir, "*__16x16.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if "t_compute" not in d:
+            continue
+        reps.append(RL.RooflineReport(**d))
+    return reps
+
+
+def main(csv_rows, report_dir="results/dryrun"):
+    reps = load_reports(report_dir)
+    if not reps:
+        print(f"\n== roofline: no reports in {report_dir} "
+              f"(run python -m repro.launch.dryrun --all --out {report_dir}) ==")
+        return
+    print(f"\n== roofline baselines ({len(reps)} cells, single pod 16x16) ==")
+    print(RL.format_table(reps))
+    for r in reps:
+        csv_rows.append((f"roofline_{r.arch}_{r.shape}",
+                         r.t_step * 1e6,
+                         f"{r.bottleneck};frac={r.roofline_fraction:.3f}"))
+
+
+if __name__ == "__main__":
+    main([])

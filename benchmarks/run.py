@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  Fig. 4  -> bench_value_heuristics   (VPTR vs Simple value gains)
+  Fig. 5  -> bench_power_capping      (power caps, sim vs emulation)
+  §3 use case -> bench_pipeline       (Neubot queries, edge vs VDC offload)
+  kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
+  §Roofline -> bench_roofline         (dry-run derived terms per cell)
+
+Prints ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig5,pipeline,kernels,roofline")
+    ap.add_argument("--no-emulation", action="store_true")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    csv_rows: list = []
+    failures = []
+
+    def run(tag, fn, *a, **kw):
+        if want is not None and tag not in want:
+            return
+        try:
+            fn(*a, **kw)
+        except Exception as e:  # keep the harness going, report at the end
+            failures.append((tag, repr(e)))
+            traceback.print_exc()
+
+    from benchmarks import (bench_kernels, bench_pipeline, bench_roofline,
+                            bench_value_heuristics, bench_power_capping)
+    run("fig4", bench_value_heuristics.main, csv_rows)
+    run("fig5", bench_power_capping.main, csv_rows,
+        emulate=not args.no_emulation)
+    run("pipeline", bench_pipeline.main, csv_rows)
+    run("kernels", bench_kernels.main, csv_rows)
+    run("roofline", bench_roofline.main, csv_rows)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print("\nBENCH FAILURES:", failures, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

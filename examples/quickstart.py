@@ -1,0 +1,37 @@
+"""Quickstart: build an assigned architecture, run a forward pass, and ask
+the JITA-4DS scheduler to compose a VDC for it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.core.costmodel import CostModel
+from repro.core.heuristics import HEURISTICS
+from repro.core.simulator import Simulator
+from repro.core.tasks import PAPER_REGIME, TaskType, WorkloadGenerator
+from repro.data import make_batch
+from repro.models import model as M
+
+print("assigned architectures:", ", ".join(list_archs()))
+
+# --- 1. a model (reduced config: CPU-sized, same code path as the full one)
+cfg = get_arch("qwen3-1.7b").reduced()
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 64, 2, 0).items()}
+logits, aux = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+print(f"forward: logits {logits.shape}, aux loss {float(aux):.4f}")
+
+# --- 2. the paper's scheduler composing VDCs for a small workload
+cost = CostModel.analytic()
+types = [TaskType(a, "train_4k") for a in ("smollm-135m", "yi-6b")]
+trace = WorkloadGenerator(types, cost, seed=0, **PAPER_REGIME).trace(10)
+result = Simulator(HEURISTICS["VPTR"], cost).run(trace)
+print(f"VPTR plan: completed {result.completed}/10 jobs, "
+      f"VoS={result.vos:.1f} (normalized {result.vos_normalized:.2f}), "
+      f"utilization {result.avg_utilization:.0%}")
+for t in result.tasks[:5]:
+    state = "dropped" if t.dropped else (
+        f"{t.chips} chips @f={t.dvfs_f:.1f} V={t.earned:.2f}")
+    print(f"  job {t.tid} {t.ttype.name:28s} -> {state}")

@@ -1,0 +1,10 @@
+"""Serving example: batched prefill + greedy decode with KV/SSM caches for
+three different architecture families (dense GQA, MoE, attention-free SSD).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve_demo
+
+for arch in ("qwen3-1.7b", "olmoe-1b-7b", "mamba2-1.3b"):
+    serve_demo(arch, batch=4, prompt_len=64, gen=16)
+print("OK: three families served through the same prefill/decode API.")

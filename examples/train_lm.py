@@ -1,0 +1,35 @@
+"""End-to-end training driver: train smollm-135m (the ~100M assigned arch)
+for a few hundred steps with checkpointing and failure recovery.
+
+On this CPU container the default uses the reduced config so a few hundred
+steps finish in minutes; pass --full on real hardware for the exact
+assigned 135M configuration (same code path).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.train import train_loop
+from repro.train import TrainHParams
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--full", action="store_true",
+                help="full 135M config (use on real hardware)")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+ap.add_argument("--p-fail", type=float, default=0.01,
+                help="injected failure probability per step")
+args = ap.parse_args()
+
+hp = TrainHParams(peak_lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                  grad_accum=2, remat="full")
+state, losses = train_loop(
+    "smollm-135m", steps=args.steps, batch=8, seq=128, full=args.full,
+    ckpt_dir=args.ckpt_dir, save_every=50, p_fail=args.p_fail, hp=hp,
+    log_every=25)
+print(f"\nloss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f} "
+      f"over {len(losses)} recorded steps (incl. replays after restarts)")
+assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn!"
+print("OK: model learned the synthetic Markov stream through failures.")

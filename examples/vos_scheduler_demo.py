@@ -1,0 +1,36 @@
+"""JITA-4DS in action: watch the VoS scheduler compose/release VDCs on the
+pod grid under a power cap, comparing heuristics on one trace.
+
+  PYTHONPATH=src python examples/vos_scheduler_demo.py
+"""
+from repro import hardware as hw
+from repro.core.costmodel import CostModel
+from repro.core.heuristics import HEURISTICS
+from repro.core.simulator import Simulator
+from repro.core.tasks import PAPER_REGIME, TaskType, WorkloadGenerator
+
+cost = CostModel.analytic()
+types = [TaskType(a, s)
+         for a in ("smollm-135m", "qwen3-1.7b", "yi-6b", "olmoe-1b-7b",
+                   "jamba-v0.1-52b", "mamba2-1.3b")
+         for s in ("train_4k", "prefill_32k", "decode_32k")]
+trace_gen = WorkloadGenerator(types, cost, seed=7, **PAPER_REGIME)
+
+print(f"{'heuristic':10s} {'VoS':>8s} {'norm':>6s} {'done':>5s} "
+      f"{'drop':>5s} {'util':>5s} {'energy MJ':>10s}")
+cap = hw.pod_power_cap_w(0.70)
+for name in ("Simple", "VPT", "VPTR", "VPT-CPC", "VPT-JSPC", "Hybrid"):
+    import copy
+    trace = copy.deepcopy(trace_gen.trace(120))
+    r = Simulator(HEURISTICS[name], cost, power_cap_w=cap).run(trace)
+    print(f"{name:10s} {r.vos:8.1f} {r.vos_normalized:6.3f} "
+          f"{r.completed:5d} {r.dropped:5d} {r.avg_utilization:5.0%} "
+          f"{r.total_energy_j/1e6:10.1f}")
+
+print("\nVDC composition trace (VPTR, first 8 scheduled jobs):")
+trace = trace_gen.trace(40)
+r = Simulator(HEURISTICS["VPTR"], cost).run(trace)
+for t in [t for t in r.tasks if t.start is not None][:8]:
+    print(f"  t={t.start:8.0f}s  job{t.tid:3d} {t.ttype.name:30s} "
+          f"VDC={t.chips:3d} chips f={t.dvfs_f:.1f} "
+          f"-> V={t.earned:.2f}")

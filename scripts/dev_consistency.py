@@ -1,0 +1,53 @@
+"""Dev check: prefill(t[0:S]) then decode(t[S]) must equal forward(t[0:S+1])
+next-token logits for every arch family."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.models import model as M
+
+S, B = 24, 2
+F32 = jnp.float32
+
+
+def run(name):
+    cfg = get_arch(name).reduced()
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.frontend == "patch_stub":
+        extras["patches"] = jax.random.normal(
+            key, (B, cfg.n_prefix_tokens, cfg.d_model)) * 0.1
+    if cfg.enc_dec is not None:
+        extras["frames"] = jax.random.normal(
+            key, (B, cfg.enc_dec.enc_seq, cfg.d_model)) * 0.1
+
+    # reference: full forward over S+1 tokens, logits at position S-? We
+    # compare the logits for predicting token S+1: forward position index S.
+    full = {"tokens": tokens, **extras}
+    logits_full, _ = M.forward(cfg, params, full, compute_dtype=F32)
+    ref = np.asarray(logits_full[:, S])
+
+    # prefill first S tokens, then decode token S at pos S
+    pre = {"tokens": tokens[:, :S], **extras}
+    logits0, cache = M.prefill(cfg, params, pre, cache_len=S + 8,
+                               compute_dtype=F32)
+    ref_prefill = np.asarray(logits_full[:, S - 1])
+    err0 = np.max(np.abs(np.asarray(logits0) - ref_prefill))
+
+    tok = tokens[:, S:S + 1]
+    logits1, _ = M.decode_step(cfg, params, cache, tok, S, compute_dtype=F32)
+    err1 = np.max(np.abs(np.asarray(logits1) - ref))
+    status = "OK " if (err0 < 2e-3 and err1 < 2e-3) else "FAIL"
+    print(f"{status} {name:24s} prefill_err={err0:.2e} decode_err={err1:.2e}")
+    return err0 < 2e-3 and err1 < 2e-3
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list_archs()
+    ok = all([run(n) for n in names])
+    sys.exit(0 if ok else 1)

@@ -1,0 +1,50 @@
+"""Dev scratch: forward/loss/prefill/decode on every reduced arch (CPU)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.models import model as M
+
+S, B = 32, 2
+
+
+def run(name):
+    cfg = get_arch(name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "patch_stub":
+        batch["patches"] = jnp.ones((B, cfg.n_prefix_tokens, cfg.d_model))
+    if cfg.enc_dec is not None:
+        batch["frames"] = jnp.ones((B, cfg.enc_dec.enc_seq, cfg.d_model))
+    loss, metrics = jax.jit(
+        lambda p, b: M.loss_fn(cfg, p, b, remat="full"))(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: loss NaN"
+    # grads
+    g = jax.jit(jax.grad(lambda p, b: M.loss_fn(cfg, p, b)[0]))(params, batch)
+    gnorm = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g)) ** 0.5
+    assert np.isfinite(gnorm), f"{name}: grad NaN"
+    # prefill + decode
+    logits0, cache = jax.jit(
+        lambda p, b: M.prefill(cfg, p, b, cache_len=S + 4))(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits0))), f"{name}: prefill NaN"
+    tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+    logits1, cache = jax.jit(
+        lambda p, c, t: M.decode_step(cfg, p, c, t, S))(params, cache, tok)
+    assert logits1.shape == (B, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits1))), f"{name}: decode NaN"
+    print(f"OK {name:24s} params={n_params:>9,} loss={float(loss):.3f} "
+          f"gnorm={gnorm:.3f}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list_archs()
+    for n in names:
+        run(n)

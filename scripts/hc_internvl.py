@@ -1,0 +1,27 @@
+"""Hillclimb 2: internvl2-76b × train_4k — most collective-bound cell
+(t_coll 72.3s; 25.6k all-gathers: ZeRO-3 re-gathers weights 3× per
+microbatch × 16 microbatches) and memory-OVER.
+
+H1 (beyond-paper): gather_once — hoist the FSDP weight gather out of the
+   microbatch loop (bf16, model-only sharding); per-microbatch cost drops
+   to the grad reduce-scatter alone. Predicted: t_coll 72 → ~20s.
+H2: H1 + 2-pod mesh (2x16x16): DP over pods halves per-device batch work.
+H3: geometry (32,8) single pod: TP=8 halves TP all-reduce sizes, kv=8
+   divides; FSDP width 32.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = {}
+for label, kw in [
+    ("H1_gather_once", dict(gather_once=True)),
+    ("H2_gather_once_2pod", dict(gather_once=True, mesh_spec="2x16x16")),
+    ("H3_32x8", dict(mesh_spec="32x8")),
+]:
+    rep = run_variant("internvl2-76b", "train_4k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_internvl.json", "w") as f:
+    json.dump(out, f, indent=1)

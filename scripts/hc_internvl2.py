@@ -1,0 +1,25 @@
+"""internvl hillclimb round 2: fix the microbatch/data-width divisibility
+(accum must satisfy global_batch/accum % data_width == 0).
+
+H4: 2-pod + accum=8 (microbatch 32 ÷ 32-way data ✓) + gather_once
+H5: 2-pod + accum=8, per-layer gathers (isolate gather_once's effect)
+H6: single-pod + accum=16 + gather_once + remat='dots' (trade recompute
+    memory-traffic for saved activations)
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = json.load(open("results/hc_internvl.json"))
+for label, kw in [
+    ("H4_2pod_a8_gather_once", dict(mesh_spec="2x16x16", accum=8,
+                                    gather_once=True)),
+    ("H5_2pod_a8", dict(mesh_spec="2x16x16", accum=8)),
+    ("H6_gather_once_dots", dict(gather_once=True, remat="dots")),
+]:
+    rep = run_variant("internvl2-76b", "train_4k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_internvl.json", "w") as f:
+    json.dump(out, f, indent=1)

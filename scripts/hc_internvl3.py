@@ -1,0 +1,21 @@
+"""internvl hillclimb round 3: the collective floor is TP activation
+all-reduces (gather_once only bought ~11%), so reduce TP width.
+H7: (32,8) accum=8 single pod — TP-AR bytes/device halve; FSDP gather
+    traffic doubles (weights per model shard 2×). Net unclear — measure.
+H8: (2,32,8) accum=4 — TP=8 across 2 pods, widest batch spread.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = json.load(open("results/hc_internvl.json"))
+for label, kw in [
+    ("H7_32x8_a8", dict(mesh_spec="32x8", accum=8)),
+    ("H8_2x32x8_a4", dict(mesh_spec="2x32x8", accum=4)),
+]:
+    rep = run_variant("internvl2-76b", "train_4k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_internvl.json", "w") as f:
+    json.dump(out, f, indent=1)

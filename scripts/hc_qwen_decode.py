@@ -1,0 +1,27 @@
+"""Hillclimb 3: qwen3-1.7b × decode_32k — collective-bound decode
+(t_coll 1.13s vs t_mem 0.19s).
+
+H0 baseline: (16,16) mesh; kv=8 < model=16 → cache sequence-sharded over
+"model" → per-layer score all-gathers for the softmax.
+H1 (paper-faithful: VDC re-composition): same 256 chips recomposed as
+   (32, 8) — kv=8 divides model=8, cache kv-head-sharded, no score
+   gathers; batch 128/32 ✓.
+H2: half-size VDC (16, 8) = 128 chips — VPTR prefers it if value/TaR wins.
+H3: (64, 4) — TP=4, even fewer gathers but fatter per-chip cache.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = {}
+for label, kw in [
+    ("H1_32x8", dict(mesh_spec="32x8")),
+    ("H2_16x8", dict(mesh_spec="16x8")),
+    ("H3_64x4", dict(mesh_spec="64x4")),
+]:
+    rep = run_variant("qwen3-1.7b", "decode_32k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_qwen_decode.json", "w") as f:
+    json.dump(out, f, indent=1)

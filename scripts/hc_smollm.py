@@ -1,0 +1,27 @@
+"""Hillclimb 1: smollm-135m × train_4k — worst roofline fraction (0.1%).
+
+H0 baseline: 256 chips, TP=16 — 9 heads unshardable → attention replicated
+16× across the model axis; a 135M model drowns on a full pod.
+H1 (paper-faithful: VDC right-sizing, the paper's own mechanism): compose a
+   16-chip VDC, pure DP (16x1) — zero TP replication.
+H2: 16-chip VDC, 4x4 — replication only 4×.
+H3 (beyond-paper): keep 256 chips but as 64x4 geometry — DP-heavy, TP=4.
+H4: q_chunk 1024 on the best geometry.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = {}
+for label, kw in [
+    ("H1_vdc16_dp", dict(mesh_spec="16x1")),
+    ("H2_vdc16_4x4", dict(mesh_spec="4x4")),
+    ("H3_pod_64x4", dict(mesh_spec="64x4")),
+    ("H4_vdc16_dp_qc1024", dict(mesh_spec="16x1", q_chunk=1024)),
+]:
+    rep = run_variant("smollm-135m", "train_4k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_smollm.json", "w") as f:
+    json.dump(out, f, indent=1)

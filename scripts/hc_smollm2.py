@@ -1,0 +1,18 @@
+"""smollm hillclimb round 2: push the full-pod geometry further.
+H5: 128x2; H6: 256x1 pure DP; H7: 64x4 + q_chunk 1024."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hillclimb import run_variant  # noqa: E402
+
+out = json.load(open("results/hc_smollm.json"))
+for label, kw in [
+    ("H5_pod_128x2", dict(mesh_spec="128x2")),
+    ("H6_pod_256x1", dict(mesh_spec="256x1")),
+    ("H7_pod_64x4_qc1024", dict(mesh_spec="64x4", q_chunk=1024)),
+]:
+    rep = run_variant("smollm-135m", "train_4k", label=label, **kw)
+    out[label] = rep.to_dict()
+with open("results/hc_smollm.json", "w") as f:
+    json.dump(out, f, indent=1)

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
+                                   latest_step, CheckpointManager)
+from repro.checkpoint.failure import FailureInjector, run_with_restarts

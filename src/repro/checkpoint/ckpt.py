@@ -1,0 +1,145 @@
+"""Checkpointing: step-atomic pytree snapshots with a manifest, async
+writes, retention, and ELASTIC restore — a checkpoint written under any
+mesh loads onto any other mesh (the VDC composer re-sizes jobs this way).
+
+Format: one .npz per checkpoint (leaves flattened by keypath) + manifest
+json. Leaves are fully gathered on save (fine at the scales we execute on
+this host; a production deployment would write per-shard OCDBT — the
+interface is the same).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(template):
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    blocking: bool = True,
+                    _executor=concurrent.futures.ThreadPoolExecutor(1)):
+    """Write `tree` at `step` atomically (tmp + rename). With
+    blocking=False the device→host transfer happens now but the file write
+    is async (returns a future)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)  # device→host sync point
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}.npz")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, final)
+        with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+            json.dump({"latest_step": step,
+                       "steps": sorted(all_steps(ckpt_dir))}, f)
+        return final
+
+    if blocking:
+        return _write()
+    return _executor.submit(_write)
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.npz$", fn)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into `template`'s structure. With `shardings` (a pytree of
+    NamedSharding), leaves are placed sharded — THE ELASTIC PATH: the mesh
+    may differ arbitrarily from the one that wrote the checkpoint."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step
+
+
+class CheckpointManager:
+    """Retention + cadence policy around save/restore."""
+
+    def __init__(self, ckpt_dir: str, save_every: int = 100,
+                 keep: int = 3, async_write: bool = True):
+        self.dir = ckpt_dir
+        self.save_every = save_every
+        self.keep = keep
+        self.async_write = async_write
+        self._pending = None
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.save_every:
+            return False
+        if self._pending is not None:
+            self._pending.result()  # one write in flight at a time
+            self._pending = None
+        res = save_checkpoint(self.dir, step, tree,
+                              blocking=not self.async_write)
+        if not isinstance(res, str):
+            self._pending = res
+        self._gc()
+        return True
+
+    def finalize(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+        self._gc()
+
+    def _gc(self):
+        steps = all_steps(self.dir)
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s:08d}.npz"))
+            except OSError:
+                pass
+
+    def restore_latest(self, template, shardings=None):
+        self.finalize()
+        return restore_checkpoint(self.dir, template, shardings=shardings)

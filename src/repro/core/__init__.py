@@ -1,0 +1,13 @@
+"""JITA-4DS core: the paper's contribution.
+
+Value-of-Service metric (Fig. 3 / Eq. 1-2), VPTR & VPT-family heuristics
+(§4.1-4.2), composable VDC submesh allocation, the discrete-event simulator
+and its emulation-based validation."""
+from repro.core.value import ValueCurve, TaskValueSpec, task_value, vos_total
+from repro.core.tasks import Task, TaskType, WorkloadGenerator
+from repro.core.costmodel import CostModel
+from repro.core.vdc import PodGrid, VDC
+from repro.core.heuristics import (HEURISTICS, SimpleHeuristic, VPTHeuristic,
+                                   VPTRHeuristic, VPTCPCHeuristic,
+                                   VPTJSPCHeuristic, HybridHeuristic)
+from repro.core.simulator import Simulator, SimResult

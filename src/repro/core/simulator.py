@@ -1,0 +1,146 @@
+"""Discrete-event simulator for JITA-4DS (§4.2).
+
+Events: task arrivals (from a trace) and VDC completions. At every event
+the active heuristic maps pending tasks onto freshly composed VDCs; tasks
+whose value has decayed to zero under every configuration are dropped
+(oversubscription). Completion earns Eq. 1 value; Eq. 2 accumulates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.costmodel import CostModel
+from repro.core.heuristics import Heuristic
+from repro.core.tasks import Task
+from repro.core.value import task_value
+from repro.core.vdc import PodGrid
+
+
+@dataclasses.dataclass
+class SimResult:
+    heuristic: str
+    vos: float                      # Eq. 2 total
+    perf_value: float               # Σ γ w_p v_p
+    energy_value: float             # Σ γ w_e v_e
+    completed: int
+    dropped: int
+    total_energy_j: float
+    makespan: float
+    avg_utilization: float
+    vos_normalized: float           # vos / Σ_j γ_j (w_p+w_e) v_max
+    tasks: List[Task] = dataclasses.field(default_factory=list, repr=False)
+
+
+class Simulator:
+    def __init__(self, heuristic: Heuristic, cost: CostModel,
+                 power_cap_w: Optional[float] = None,
+                 grid: Optional[PodGrid] = None):
+        self.heuristic = heuristic
+        self.cost = cost
+        self.power_cap_w = power_cap_w
+        self.grid = grid or PodGrid()
+
+    def run(self, trace: List[Task]) -> SimResult:
+        grid, cost = self.grid, self.cost
+        events: List[Tuple[float, int, str, object]] = []
+        for t in trace:
+            heapq.heappush(events, (t.arrival, t.tid, "arrive", t))
+        pending: List[Task] = []
+        running: Dict[int, Tuple[Task, object]] = {}
+        seq = len(trace)
+        vos = perf_v = energy_v = tot_energy = 0.0
+        completed = dropped = 0
+        util_area = 0.0
+        last_t = 0.0
+
+        def drop_dead(now: float):
+            nonlocal dropped
+            alive = []
+            for task in pending:
+                best_chips = max(task.ttype.allowable_chips)
+                v, _, _ = _best_possible(task, cost, now, best_chips)
+                if v <= 0.0:
+                    task.dropped = True
+                    dropped += 1
+                else:
+                    alive.append(task)
+            pending[:] = alive
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            util_area += grid.used_chips * (now - last_t)
+            last_t = now
+            if kind == "arrive":
+                pending.append(payload)
+            else:  # complete
+                task, vdc = payload
+                grid.release(vdc)
+                latency = task.finish - task.arrival
+                v_p = task.value.perf_curve.value(latency)
+                v_e = task.value.energy_curve.value(task.energy_j)
+                v = task_value(task.value, latency, task.energy_j)
+                task.earned = v
+                vos += v
+                if v > 0:
+                    perf_v += task.value.gamma * task.value.w_p * v_p
+                    energy_v += task.value.gamma * task.value.w_e * v_e
+                tot_energy += task.energy_j
+                completed += 1
+
+            drop_dead(now)
+            for task, chips, f in self.heuristic.assign(
+                    pending, grid, cost, now, self.power_cap_w):
+                vdc = grid.compose(chips, f, task.tid)
+                if vdc is None:
+                    continue
+                pending.remove(task)
+                t_step = cost.time_per_step(task.ttype.arch,
+                                            task.ttype.shape, chips, f)
+                task.start = now
+                task.finish = now + t_step * task.steps
+                task.chips, task.dvfs_f = chips, f
+                task.energy_j = cost.energy_per_step(
+                    task.ttype.arch, task.ttype.shape, chips, f) * task.steps
+                seq += 1
+                heapq.heappush(events,
+                               (task.finish, seq, "complete", (task, vdc)))
+
+        # anything still pending at the end earned nothing
+        dropped += len(pending)
+        max_vos = sum(t.value.gamma * (t.value.w_p + t.value.w_e)
+                      for t in trace) or 1.0
+        return SimResult(
+            heuristic=self.heuristic.name, vos=vos, perf_value=perf_v,
+            energy_value=energy_v, completed=completed, dropped=dropped,
+            total_energy_j=tot_energy, makespan=last_t,
+            avg_utilization=util_area / max(last_t, 1e-9)
+            / self.grid.total_chips,
+            vos_normalized=vos / max_vos, tasks=trace)
+
+
+def _best_possible(task: Task, cost: CostModel, now: float, chips: int):
+    """Optimistic value if started right now on the largest config."""
+    t_step = cost.time_per_step(task.ttype.arch, task.ttype.shape, chips, 1.0)
+    dur = t_step * task.steps
+    latency = (now - task.arrival) + dur
+    energy = cost.energy_per_step(task.ttype.arch, task.ttype.shape,
+                                  chips, 1.0) * task.steps
+    return task_value(task.value, latency, energy), dur, energy
+
+
+def compare_heuristics(heuristics, cost: CostModel, trace_fn,
+                       n_traces: int = 5,
+                       power_cap_w: Optional[float] = None
+                       ) -> Dict[str, List[SimResult]]:
+    """Run each heuristic over n fresh traces (same seeds across heuristics)."""
+    import copy
+    out: Dict[str, List[SimResult]] = {h.name: [] for h in heuristics}
+    for i in range(n_traces):
+        base_trace = trace_fn(i)
+        for h in heuristics:
+            trace = copy.deepcopy(base_trace)
+            sim = Simulator(h, cost, power_cap_w=power_cap_w)
+            out[h.name].append(sim.run(trace))
+    return out

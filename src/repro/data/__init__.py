@@ -1,0 +1,2 @@
+from repro.data.tokens import SyntheticLM, make_batch
+from repro.data.loader import ShardedLoader

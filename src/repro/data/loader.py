@@ -1,0 +1,40 @@
+"""Sharded host loader: each host materializes only its slice of the
+global batch and the arrays are assembled into a globally-sharded
+jax.Array (make_array_from_callback) — no host ever holds the full batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.data.tokens import make_batch
+
+
+class ShardedLoader:
+    def __init__(self, cfg: ArchConfig, seq_len: int, global_batch: int,
+                 mesh: Optional[Mesh] = None, seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.mesh = mesh
+        self.seed = seed
+
+    def __call__(self, step: int) -> Dict[str, jax.Array]:
+        host = make_batch(self.cfg, self.seq_len, self.global_batch, step,
+                          self.seed)
+        if self.mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in host.items()}
+        from repro import sharding as shd
+        b_ax = shd.batch_axes_for(self.mesh, self.global_batch)
+        out = {}
+        for k, v in host.items():
+            spec = P(b_ax, *([None] * (v.ndim - 1)))
+            sharding = NamedSharding(self.mesh, spec)
+            out[k] = jax.make_array_from_callback(
+                v.shape, sharding, lambda idx, v=v: v[idx])
+        return out

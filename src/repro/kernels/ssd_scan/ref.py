@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential (non-chunked)
+state-space recurrence, O(L) steps — slow but unambiguous."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_reference(x, dt, A, B_, C):
+    """x [B,L,H,P]; dt [B,L,H]; A [H]; B_/C [B,L,G,N] → y [B,L,H,P].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t · (B_t ⊗ x_t);  y_t = C_t · h_t
+    """
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2).astype(jnp.float32)   # [B,L,H,N]
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                     # [B,H,P],[B,H],[B,H,N]
+        decay = jnp.exp(dt_t * A)[..., None, None]    # [B,H,1,1]
+        dBx = (dt_t[..., None, None] * b_t[:, :, None, :]
+               * x_t[..., None])                      # [B,H,P,N]
+        h = h * decay + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)     # [B,L,H,P]

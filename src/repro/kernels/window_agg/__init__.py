@@ -1,0 +1,2 @@
+from repro.kernels.window_agg.ops import window_aggregate
+from repro.kernels.window_agg.ref import window_aggregate_reference

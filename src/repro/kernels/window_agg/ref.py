@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for sliding-window aggregation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_aggregate_reference(x, *, agg: str, window: int, stride: int):
+    T, C = x.shape
+    n_out = (T - window) // stride + 1
+    outs = []
+    for o in range(n_out):
+        w = x[o * stride: o * stride + window].astype(jnp.float32)
+        outs.append({"max": jnp.max, "min": jnp.min, "sum": jnp.sum,
+                     "mean": jnp.mean}[agg](w, axis=0))
+    return jnp.stack(outs).astype(x.dtype)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, print memory/cost analysis, and emit roofline reports.
+
+MUST run as its own process (`python -m repro.launch.dryrun`) so XLA_FLAGS
+takes effect before jax initializes devices.
+
+Roofline methodology (see EXPERIMENTS.md §Roofline): XLA's cost_analysis
+counts while-loop bodies ONCE, so per-cell costs are measured on two
+fully-UNROLLED depth variants (r=1 and r=2 layer groups, python loops for
+every inner scan) and extrapolated linearly to the true depth R:
+
+    total(R) = C(1) + (R - 1) · [C(2) - C(1)]
+
+which is exact because the layer stack is homogeneous per group. The full
+scanned program is still compiled for the memory analysis (its peak is the
+real one) and for the multi-pod shardability proof.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import roofline as RL
+from repro import sharding as shd
+from repro.configs import (SHAPES, ArchConfig, ShapeSpec, get_arch,
+                           list_archs, supports_shape)
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train import TrainHParams, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TRAIN_ACCUM = 4
+
+
+def _variant_cfg(cfg: ArchConfig, r: int) -> ArchConfig:
+    """Depth-r variant: r repeats of the layer pattern (enc scaled too)."""
+    pattern, _ = cfg.scan_groups()
+    repl = {"n_layers": len(pattern) * r}
+    if cfg.enc_dec is not None:
+        repl["enc_dec"] = dataclasses.replace(cfg.enc_dec, n_enc_layers=r)
+    return dataclasses.replace(cfg, **repl)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               unroll: bool = False, grad_accum: int = TRAIN_ACCUM,
+               verbose: bool = True, hp: Optional[TrainHParams] = None):
+    """Lower + compile one (arch × shape) cell on `mesh`."""
+    if hp is None:
+        accum = cfg.grad_accum if grad_accum == TRAIN_ACCUM else grad_accum
+        hp = TrainHParams(grad_accum=accum if shape.kind == "train" else 1,
+                          unroll=unroll)
+    if shape.kind == "train" and hp.grad_accum > 1:
+        # §Perf Cell B, H2 lesson: a microbatch that does not divide the
+        # data-axis width silently replicates ALL compute across it.
+        width = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                width *= mesh.shape[a]
+        micro = shape.global_batch // hp.grad_accum
+        if micro % width and width % micro:
+            print(f"  WARNING: microbatch {micro} vs batch-shard width "
+                  f"{width}: compute will replicate (fix grad_accum)")
+    with shd.use_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(cfg, hp)
+            state_sds = SP.train_state_sds(cfg)
+            state_sh = SP.train_state_shardings(mesh, cfg)
+            batch_sds = SP.batch_specs(cfg, shape)
+            batch_sh = SP.batch_shardings(mesh, cfg, shape)
+            jf = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            lowered = jf.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            params_sds = SP.param_sds(cfg, jnp.bfloat16)
+            params_sh = SP.param_shardings(mesh, cfg, "serve")
+            batch_sds = SP.batch_specs(cfg, shape)
+            batch_sh = SP.batch_shardings(mesh, cfg, shape)
+            cache_sh = SP.cache_shardings(mesh, cfg, shape.global_batch)
+            logits_sh = NamedSharding(
+                mesh, P(shd.batch_axes_for(mesh, shape.global_batch), "model"))
+
+            def prefill(params, batch):
+                return M.prefill(cfg, params, batch, shape.seq_len,
+                                 q_chunk=1024, unroll=unroll)
+
+            jf = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh))
+            lowered = jf.lower(params_sds, batch_sds)
+        else:  # decode
+            B = shape.global_batch
+            long_ctx = B == 1
+            params_sds = SP.param_sds(cfg, jnp.bfloat16)
+            params_sh = SP.param_shardings(
+                mesh, cfg, "serve_long" if long_ctx else "serve")
+            cache_sds = SP.cache_sds(cfg, B, shape.seq_len)
+            cache_sh = SP.cache_shardings(mesh, cfg, B, long_ctx)
+            b_ax = shd.batch_axes_for(mesh, B)
+            tok_sh = NamedSharding(mesh, P(b_ax, None))
+            logits_sh = NamedSharding(mesh, P(b_ax, "model"))
+
+            def decode(params, cache, token, pos):
+                return M.decode_step(cfg, params, cache, token, pos,
+                                     unroll=unroll)
+
+            jf = jax.jit(decode,
+                         in_shardings=(params_sh, cache_sh, tok_sh, None),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params_sds, cache_sds,
+                               jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        t0 = time.time()
+        compiled = lowered.compile()
+        if verbose:
+            print(f"    compiled in {time.time() - t0:.1f}s "
+                  f"({'unrolled' if unroll else 'scanned'}, "
+                  f"{cfg.n_layers} layers)")
+    return compiled, lowered
+
+
+def extrapolated_costs(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                       verbose: bool = True, hp=None):
+    """Per-device (flops, bytes, coll_bytes, counts) extrapolated to true R."""
+    pattern, R = cfg.scan_groups()
+    c = {}
+    for r in (1, 2):
+        cfg_r = _variant_cfg(cfg, r)
+        compiled, _ = lower_cell(cfg_r, shape, mesh, unroll=True,
+                                 verbose=verbose, hp=hp)
+        c[r] = RL.raw_costs(compiled)
+    flops = c[1][0] + (R - 1) * (c[2][0] - c[1][0])
+    nbytes = c[1][1] + (R - 1) * (c[2][1] - c[1][1])
+    coll = c[1][2] + (R - 1) * (c[2][2] - c[1][2])
+    counts = {k: c[1][3].get(k, 0) + (R - 1) * (c[2][3].get(k, 0)
+                                                - c[1][3].get(k, 0))
+              for k in set(c[1][3]) | set(c[2][3])}
+    if verbose:
+        dfl = c[2][0] - c[1][0]
+        print(f"    variants: r1_flops={c[1][0]:.3e} r2-r1={dfl:.3e} "
+              f"R={R} -> total={flops:.3e}")
+    return flops, nbytes, coll, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             skip_roofline: bool = False):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        print(f"SKIP {arch} × {shape_name} [{mesh_name}]: {why}")
+        return "skip"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    print(f"CELL {arch} × {shape_name} [{mesh_name}] kind={shape.kind}")
+
+    # 1) full scanned program: shardability proof + true peak memory
+    compiled, _ = lower_cell(cfg, shape, mesh, verbose=verbose)
+    ma = compiled.memory_analysis()
+    print(f"  memory_analysis(/dev): args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+          f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+          f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB")
+    cost = compiled.cost_analysis()
+    print(f"  cost_analysis(/dev, loop bodies once): "
+          f"flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+    mem = (ma.argument_size_in_bytes, ma.temp_size_in_bytes,
+           ma.output_size_in_bytes)
+    if skip_roofline or multi_pod:
+        # multi-pod pass proves the "pod" axis shards; roofline is 1-pod only
+        rep = None
+    else:
+        flops, nbytes, coll, counts = extrapolated_costs(
+            cfg, shape, mesh, verbose=verbose)
+        rep = RL.analyze_costs(flops, nbytes, coll, counts, cfg, shape,
+                               mesh_name, chips, mem=mem)
+        print(f"  roofline: t_comp={rep.t_compute:.4f}s "
+              f"t_mem={rep.t_memory:.4f}s t_coll={rep.t_collective:.4f}s "
+              f"-> {rep.bottleneck}-bound; useful={rep.useful_ratio:.3f} "
+              f"frac={rep.roofline_fraction:.1%}")
+        print(f"  collectives: {rep.collective_counts}")
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fn = f"{arch}__{shape_name}__{mesh_name}.json"
+            with open(os.path.join(out_dir, fn), "w") as f:
+                json.dump(rep.to_dict(), f, indent=1)
+    if out_dir and multi_pod:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_name}__{mesh_name}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump({"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "compiled": True,
+                       "arg_bytes": ma.argument_size_in_bytes,
+                       "temp_bytes": ma.temp_size_in_bytes,
+                       "out_bytes": ma.output_size_in_bytes}, f, indent=1)
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    reports, failures, n_cells = [], [], 0
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                try:
+                    rep = run_cell(a, s, mp, out_dir=args.out,
+                                   skip_roofline=args.skip_roofline)
+                    if rep not in (None, "skip"):
+                        reports.append(rep)
+                    if rep != "skip":
+                        n_cells += 1
+                except Exception as e:
+                    failures.append((a, s, mp, repr(e)))
+                    traceback.print_exc()
+    if reports:
+        print("\n" + RL.format_table(reports))
+    print(f"\n{n_cells} cells compiled, {len(failures)} failures")
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

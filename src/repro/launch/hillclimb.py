@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Perf hillclimbing driver (§Perf): re-lower a cell under candidate
+changes (sharding rules, mesh/submesh geometry, accum, serve profile) and
+report the roofline-term deltas vs the recorded baseline.
+
+  python -m repro.launch.hillclimb --arch smollm-135m --shape train_4k \
+      --mesh 4x4 --accum 1
+"""
+import argparse
+import contextlib
+import json
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import AxisType
+
+from repro import roofline as RL
+from repro import sharding as shd
+from repro.configs import SHAPES, get_arch
+from repro.launch import dryrun as DR
+from repro.train import TrainHParams
+
+
+def make_mesh(spec: str):
+    dims = [int(x) for x in spec.split("x")]
+    names = {1: ("model",), 2: ("data", "model"),
+             3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(tuple(dims), names,
+                         axis_types=(AxisType.Auto,) * len(dims))
+
+
+@contextlib.contextmanager
+def rule_override(profile: str, **updates):
+    """Temporarily rewrite logical-axis rules, e.g. heads=('data','model')."""
+    rules = shd.PROFILES[profile]
+    saved = dict(rules)
+    rules.update({k: tuple(v) if isinstance(v, (list, tuple)) else (v,)
+                  for k, v in updates.items()})
+    try:
+        yield
+    finally:
+        rules.clear()
+        rules.update(saved)
+
+
+def run_variant(arch: str, shape_name: str, *, mesh_spec: str = "16x16",
+                accum: Optional[int] = None, q_chunk: int = 512,
+                rules: Optional[Dict] = None, profile: str = "train",
+                label: str = "variant", verbose: bool = True,
+                skip_full: bool = False, **hp_kwargs):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_mesh(mesh_spec)
+    hp = hp_v = None
+    if shape.kind == "train":
+        hp_accum = accum if accum is not None else cfg.grad_accum
+        hp = TrainHParams(grad_accum=hp_accum, q_chunk=q_chunk, **hp_kwargs)
+        hp_v = TrainHParams(grad_accum=hp_accum, q_chunk=q_chunk,
+                            unroll=True, **hp_kwargs)
+    ctx = rule_override(profile, **rules) if rules else contextlib.nullcontext()
+    with ctx:
+        flops, nbytes, coll, counts = DR.extrapolated_costs(
+            cfg, shape, mesh, verbose=verbose, hp=hp_v)
+        if skip_full:
+            class _MA:  # memory analysis from variants is meaningless;
+                argument_size_in_bytes = 0  # caller opted out
+                temp_size_in_bytes = 0
+                output_size_in_bytes = 0
+            ma = _MA()
+        else:
+            compiled, _ = DR.lower_cell(cfg, shape, mesh, hp=hp,
+                                        verbose=False)
+            ma = compiled.memory_analysis()
+    rep = RL.analyze_costs(
+        flops, nbytes, coll, counts, cfg, shape, mesh_spec, mesh.size,
+        mem=(ma.argument_size_in_bytes, ma.temp_size_in_bytes,
+             ma.output_size_in_bytes), note=label)
+    if verbose:
+        print(f"[{label}] {arch}×{shape_name} @{mesh_spec}: "
+              f"t_comp={rep.t_compute:.4f} t_mem={rep.t_memory:.4f} "
+              f"t_coll={rep.t_collective:.4f} -> {rep.bottleneck}; "
+              f"frac={rep.roofline_fraction:.2%} "
+              f"HBM={(rep.arg_bytes+rep.temp_bytes)/2**30:.1f}GiB")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--label", default="variant")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rep = run_variant(args.arch, args.shape, mesh_spec=args.mesh,
+                      accum=args.accum, q_chunk=args.q_chunk,
+                      label=args.label)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep.to_dict(), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — device counts are only locked
+in when a launcher actually builds a mesh (dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 first).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_submesh(n_chips: int, *, model_parallel: int = 16) -> Mesh:
+    """A VDC submesh: n_chips arranged as (data, model). Used by the VoS
+    scheduler (core/vdc.py) when composing per-job virtual data centers."""
+    model = min(model_parallel, n_chips)
+    while n_chips % model:
+        model //= 2
+    data = n_chips // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh for CPU tests."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)
+plus sharding assignments for the dry-run / launchers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim import AdamWState
+from repro.train.state import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    """Input ShapeDtypeStructs for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S), jnp.int32)
+    if cfg.frontend == "patch_stub":
+        out["patches"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model),
+                             jnp.bfloat16)
+    if cfg.enc_dec is not None:
+        out["frames"] = SDS((B, cfg.enc_dec.enc_seq, cfg.d_model),
+                            jnp.bfloat16)
+    return out
+
+
+def batch_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeSpec):
+    b_ax = shd.batch_axes_for(mesh, shape.global_batch)
+    out = {"tokens": NamedSharding(mesh, P(b_ax, None))}
+    if shape.kind == "train":
+        out["labels"] = NamedSharding(mesh, P(b_ax, None))
+    if cfg.frontend == "patch_stub":
+        out["patches"] = NamedSharding(mesh, P(b_ax, None, None))
+    if cfg.enc_dec is not None:
+        out["frames"] = NamedSharding(mesh, P(b_ax, None, None))
+    return out
+
+
+def param_sds(cfg: ArchConfig, dtype=jnp.float32):
+    """Abstract param shapes via eval_shape (never materialized)."""
+    sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype != jnp.float32:
+        sds = jax.tree.map(lambda s: SDS(s.shape, dtype), sds)
+    return sds
+
+
+def train_state_sds(cfg: ArchConfig):
+    p = param_sds(cfg)
+    f32 = lambda t: jax.tree.map(lambda s: SDS(s.shape, jnp.float32), t)
+    return TrainState(params=p, opt=AdamWState(mu=f32(p), nu=f32(p),
+                                               count=SDS((), jnp.int32)),
+                      step=SDS((), jnp.int32))
+
+
+def param_shardings(mesh: Mesh, cfg: ArchConfig, profile: str):
+    axes = M.param_axes(cfg)
+    specs = shd.build_param_specs(mesh, axes, param_sds(cfg), profile)
+    return shd.shardings_from_specs(mesh, specs)
+
+
+def train_state_shardings(mesh: Mesh, cfg: ArchConfig):
+    ps = param_shardings(mesh, cfg, "train")
+    return TrainState(params=ps, opt=AdamWState(
+        mu=ps, nu=ps, count=NamedSharding(mesh, P())),
+        step=NamedSharding(mesh, P()))
+
+
+def cache_sds(cfg: ArchConfig, batch: int, cache_len: int,
+              dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, cache_len, dtype))
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, batch: int,
+                    long_context: bool = False):
+    """Walk the cache pytree and assign decode-profile specs (DESIGN §4)."""
+    sds = cache_sds(cfg, batch, 8, jnp.bfloat16)  # structure only
+
+    def spec_for(d):
+        out = {}
+        for name, leaf in d.items():
+            if name in ("k", "v", "xk", "xv"):
+                kv, dh = leaf.shape[-2], leaf.shape[-1]
+                out[name] = shd.kv_cache_spec(mesh, batch, kv, dh,
+                                              long_context)
+            elif name == "conv":
+                out[name] = P(None, shd.batch_axes_for(mesh, batch),
+                              None, "model")
+            elif name == "h":
+                n_heads = leaf.shape[-3]
+                out[name] = shd.ssm_cache_specs(mesh, batch, n_heads)["h"]
+            else:  # pragma: no cover
+                out[name] = P(*([None] * len(leaf.shape)))
+        return out
+
+    specs = tuple(spec_for(d) for d in sds)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,93 @@
+"""Training launcher: end-to-end driver with checkpointing, failure
+injection, straggler monitoring, and (optionally) a mesh.
+
+CPU-friendly: reduced configs by default (--full uses the assigned config —
+only sensible on real hardware).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.checkpoint import CheckpointManager, FailureInjector, run_with_restarts
+from repro.configs import get_arch
+from repro.data import ShardedLoader
+from repro.models import model as M
+from repro.runtime.straggler import StragglerMonitor
+from repro.train import TrainHParams, TrainState, init_train_state, make_train_step
+
+
+def train_loop(arch: str, *, steps: int = 100, batch: int = 8,
+               seq: int = 128, full: bool = False, ckpt_dir: Optional[str] = None,
+               save_every: int = 50, p_fail: float = 0.0, seed: int = 0,
+               mesh=None, hp: Optional[TrainHParams] = None, log_every: int = 10):
+    cfg = get_arch(arch) if full else get_arch(arch).reduced()
+    hp = hp or TrainHParams(peak_lr=1e-3, warmup_steps=20, total_steps=steps,
+                            grad_accum=1, remat="none")
+    loader = ShardedLoader(cfg, seq, batch, mesh=mesh, seed=seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    state = init_train_state(params)
+    step_fn = jax.jit(make_train_step(cfg, hp), donate_argnums=(0,))
+
+    mon = StragglerMonitor(n_hosts=1)
+    losses = []
+
+    def one_step(state, step):
+        t0 = time.perf_counter()
+        batch_d = loader(step)
+        state, metrics = step_fn(state, batch_d)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        mon.record_step(step, [dt])
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        return state, {"loss": loss, "t": dt}
+
+    with shd.use_mesh(mesh):
+        if ckpt_dir:
+            mgr = CheckpointManager(ckpt_dir, save_every=save_every)
+            inj = FailureInjector(p_fail=p_fail, seed=seed)
+            state, history, restarts = run_with_restarts(
+                init_state=state, train_one_step=one_step, ckpt_manager=mgr,
+                n_steps=steps, injector=inj)
+            print(f"done: {len(history)} step records, {restarts} restarts")
+        else:
+            for step in range(steps):
+                state, _ = one_step(state, step)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--p-fail", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    _, losses = train_loop(args.arch, steps=args.steps, batch=args.batch,
+                           seq=args.seq, full=args.full,
+                           ckpt_dir=args.ckpt_dir,
+                           save_every=args.save_every, p_fail=args.p_fail,
+                           seed=args.seed)
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean loss {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""int8 KV-cache quantization (the §Perf Cell C queued lever).
+
+Decode at 32k context is memory-bound on cache reads; int8 storage with
+per-(position, head) scales halves the cache bytes vs bf16 (values +
+scales) and therefore the t_memory floor. Post-RoPE quantization,
+KIVI/KVQuant-style (arXiv:2402.02750) per-token-per-head absmax scaling —
+the TPU-friendly layout (scales broadcast along the 128-wide head_dim
+lane axis).
+
+Quantized caches slot into the same pytree positions as the bf16 ones:
+{"k": int8 [.., S, KV, dh], "k_s": bf16 [.., S, KV, 1], same for v}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [..., dh] → (int8 values, bf16 scale[..., 1]); absmax per row."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
+                  ) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_quant_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int):
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), jnp.int8),
+        "k_s": jnp.zeros((batch, cache_len, n_kv, 1), jnp.bfloat16),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), jnp.int8),
+        "v_s": jnp.zeros((batch, cache_len, n_kv, 1), jnp.bfloat16),
+    }
+
+
+def update_quant_cache(cache, k_new: jax.Array, v_new: jax.Array, pos):
+    """Masked one-hot write (GSPMD-friendly, see layers.attention_decode)."""
+    Smax = cache["k"].shape[1]
+    write = (jnp.arange(Smax) == pos)[None, :, None, None]
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    return {
+        "k": jnp.where(write, kq, cache["k"]),
+        "k_s": jnp.where(write, ks, cache["k_s"]),
+        "v": jnp.where(write, vq, cache["v"]),
+        "v_s": jnp.where(write, vs, cache["v_s"]),
+    }
+
+
+def attend_quant(q: jax.Array, cache, pos, *, dtype=jnp.bfloat16):
+    """Decode attention over an int8 cache. q: [B, 1, H, dh] (post-RoPE).
+
+    Scores computed against dequantized K with the per-row scale folded in
+    AFTER the int8 dot (q·(s·k) = s·(q·k)), so the MXU contraction runs on
+    the narrow type and the scale multiplies the [B,H,1,S] scores — the
+    bandwidth win is preserved end to end.
+    """
+    import math
+    B, _, H, dh = q.shape
+    KV = cache["k"].shape[2]
+    rep = H // KV
+    kq, ks = cache["k"], cache["k_s"]
+    vq, vs = cache["v"], cache["v_s"]
+    if rep > 1:
+        kq = jnp.repeat(kq, rep, axis=2)
+        ks = jnp.repeat(ks, rep, axis=2)
+        vq = jnp.repeat(vq, rep, axis=2)
+        vs = jnp.repeat(vs, rep, axis=2)
+    scale = 1.0 / math.sqrt(dh)
+    # int8 contraction; scales fold into the score
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    scores = scores * ks[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    Smax = kq.shape[1]
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # (p·s_v)·v_q: fold value scales into probabilities
+    pv = probs * vs[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bhqk,bkhd->bqhd", pv.astype(jnp.float32),
+                     vq.astype(jnp.float32))
+    return out.astype(dtype)

@@ -1,0 +1,321 @@
+"""Core model layers: norms, positions, attention, MLP.
+
+Pure-JAX pytree style: ``init_*`` returns a params dict (+ a parallel
+"logical axes" dict used by repro.sharding), ``*_fwd`` applies it.
+
+Attention is implemented *blockwise over query chunks* (lax.scan) so the
+materialized score buffer is O(q_chunk × kv_len) rather than O(seq²) — this
+is the pure-JAX oracle of the Pallas flash kernel and keeps the dry-run
+memory analysis honest for 32k prefill without kernel support on CPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+DEFAULT_Q_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_axes() -> Params:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+def rmsnorm_nc(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with an explicit scale vector (e.g. per-head qk-norm)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim//2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (broadcastable)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angles = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angles))
+    pe = pe.at[:, 1::2].set(jnp.cos(angles[:, : (d - d // 2)]))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads, head_dim), d_model),
+        "wk": _dense_init(ks[1], (d_model, n_kv, head_dim), d_model),
+        "wv": _dense_init(ks[2], (d_model, n_kv, head_dim), d_model),
+        "wo": _dense_init(ks[3], (n_heads, head_dim, d_model), n_heads * head_dim),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+def attention_axes(qk_norm: bool) -> Params:
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qk_norm:
+        p["q_norm"] = ("head_dim",)
+        p["k_norm"] = ("head_dim",)
+    return p
+
+
+def _qkv(params: Params, x: jax.Array, positions, theta: float,
+         qk_norm: bool, use_rope: bool, dtype) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if qk_norm:
+        q = rmsnorm_nc(q, params["q_norm"])
+        k = rmsnorm_nc(k, params["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, q_chunk: int = DEFAULT_Q_CHUNK,
+                      q_offset: int = 0, unroll: bool = False) -> jax.Array:
+    """Blockwise attention over query chunks.
+
+    q: [B, Sq, H, dh]; k/v: [B, Skv, KV, dh]; GQA via head-group reshape.
+    Scores materialized per chunk: [B, H, q_chunk, Skv]. `unroll` replaces
+    the lax.scan with a python loop (exact dry-run cost accounting).
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    rep = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    if Sq % q_chunk or Sq == q_chunk:
+        q_chunk = Sq
+    n_chunks = Sq // q_chunk
+
+    # GQA via kv-head repeat (NOT a (KV, rep) reshape of q's head axis: that
+    # reshape re-tiles the TP-sharded head dim and forces SPMD all-gathers;
+    # repeating the — typically replicated — kv heads is comm-free and XLA
+    # folds the broadcast into the dot).
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    qg = jnp.moveaxis(q.reshape(B, n_chunks, q_chunk, H, dh), 1, 0)
+    kv_pos = jnp.arange(Skv)
+
+    def chunk_fn(qc, i):
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, k) * scale
+        scores = scores.astype(jnp.float32)
+        if causal:
+            q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if unroll:
+        outs = jnp.stack([chunk_fn(qg[i], jnp.int32(i))
+                          for i in range(n_chunks)])
+    else:
+        _, outs = jax.lax.scan(
+            lambda c, xi: (c, chunk_fn(*xi)), None,
+            (qg, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, dh)
+    return out
+
+
+def attention_fwd(params: Params, x: jax.Array, *, n_kv: int, theta: float,
+                  qk_norm: bool, causal: bool = True, use_rope: bool = True,
+                  positions: Optional[jax.Array] = None,
+                  kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  q_chunk: int = DEFAULT_Q_CHUNK,
+                  unroll: bool = False) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, positions, theta, qk_norm, use_rope, dtype)
+    if kv_override is not None:
+        k, v = kv_override
+    out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def attention_prefill(params: Params, x: jax.Array, *, n_kv: int, theta: float,
+                      qk_norm: bool, use_rope: bool, cache_len: int,
+                      q_chunk: int = DEFAULT_Q_CHUNK, unroll: bool = False):
+    """Like attention_fwd (causal) but also returns k/v padded to cache_len."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, positions, theta, qk_norm, use_rope, dtype)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                            unroll=unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    pad = cache_len - S
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (k_c, v_c)
+
+
+def attention_decode(params: Params, x: jax.Array, cache_kv, pos, *,
+                     theta: float, qk_norm: bool, use_rope: bool = True):
+    """Single-token decode. x: [B, 1, D]; cache k/v: [B, Smax, KV, dh];
+    pos: scalar int32 — current write index (tokens 0..pos-1 are valid)."""
+    B, _, D = x.shape
+    dtype = x.dtype
+    k_cache, v_cache = cache_kv
+    Smax = k_cache.shape[1]
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, positions, theta, qk_norm, use_rope, dtype)
+    # one-hot masked write instead of dynamic_update_slice: a dynamic-index
+    # write into a sequence-sharded cache forces SPMD to all-gather the whole
+    # cache; the select shards cleanly over the seq dim (MaxText-style).
+    write = (jnp.arange(Smax) == pos)[None, :, None, None]
+    k_cache = jnp.where(write, k.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(write, v.astype(v_cache.dtype), v_cache)
+    H, KV = q.shape[2], k_cache.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    kr, vr = k_cache, v_cache
+    if rep > 1:  # GQA via repeat (see chunked_attention)
+        kr = jnp.repeat(kr, rep, axis=2)
+        vr = jnp.repeat(vr, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale
+    scores = scores.astype(jnp.float32)
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return out, (k_cache, v_cache)
+
+
+def attention_readonly(params: Params, x: jax.Array, cache_kv, *,
+                       qk_norm: bool):
+    """Cross-attention during decode: attend over a fixed cache, no write,
+    no positional encoding on q (whisper-style cross-attn)."""
+    B, _, D = x.shape
+    dtype = x.dtype
+    k_cache, v_cache = cache_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if qk_norm:
+        q = rmsnorm_nc(q, params["q_norm"])
+    H, KV = q.shape[2], k_cache.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if rep > 1:  # GQA via repeat (see chunked_attention)
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache) * scale
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff), d_model),
+        "w_up": _dense_init(ks[1], (d_model, d_ff), d_model),
+        "w_down": _dense_init(ks[2], (d_ff, d_model), d_ff),
+    }
+
+
+def mlp_axes() -> Params:
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def mlp_fwd(params: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return table.astype(dtype)[tokens]
+
+
+def logits_fwd(table_or_unembed: jax.Array, x: jax.Array, tied: bool,
+               real_vocab: int) -> jax.Array:
+    """Project to (padded) vocab; padded rows masked to -inf (fp32 logits)."""
+    w = table_or_unembed.astype(x.dtype)
+    if tied:
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if V > real_vocab:
+        mask = jnp.arange(V) < real_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

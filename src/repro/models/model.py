@@ -1,0 +1,515 @@
+"""Model assembly: decoder-only LMs (dense/MoE/hybrid/SSM/VLM) and the
+whisper encoder-decoder, all as pure-JAX pytrees.
+
+Layer stacks are `lax.scan`s over *pattern groups* (configs.scan_groups):
+params for each pattern position are stacked [R, ...] so HLO size is
+O(pattern length), not O(n_layers) — 80-layer internvl2 lowers as one
+scanned group. Caches mirror the same structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(cfg: ArchConfig, kind: str, key) -> Params:
+    mixer, ff = kind.split("+")
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if mixer == "attn":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["attn"] = L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm)
+    else:
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["ssm"] = SSM.init_ssm(ks[0], cfg.d_model, cfg.ssm)
+    if ff == "mlp":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    elif ff == "moe":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.moe)
+    return p
+
+
+def _block_axes(cfg: ArchConfig, kind: str) -> Params:
+    mixer, ff = kind.split("+")
+    p: Params = {}
+    if mixer == "attn":
+        p["ln1"] = L.rmsnorm_axes()
+        p["attn"] = L.attention_axes(cfg.qk_norm)
+    else:
+        p["ln1"] = L.rmsnorm_axes()
+        p["ssm"] = SSM.ssm_axes()
+    if ff in ("mlp", "moe"):
+        p["ln2"] = L.rmsnorm_axes()
+        p["mlp" if ff == "mlp" else "moe"] = (
+            L.mlp_axes() if ff == "mlp" else MOE.moe_axes())
+    return p
+
+
+def _init_dec_xblock(cfg: ArchConfig, key) -> Params:
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm),
+        "ln_x": L.init_rmsnorm(cfg.d_model),
+        "xattn": L.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_xblock_axes(cfg: ArchConfig) -> Params:
+    return {
+        "ln1": L.rmsnorm_axes(), "attn": L.attention_axes(cfg.qk_norm),
+        "ln_x": L.rmsnorm_axes(), "xattn": L.attention_axes(cfg.qk_norm),
+        "ln2": L.rmsnorm_axes(), "mlp": L.mlp_axes(),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    pattern, R = cfg.scan_groups()
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": L.init_embedding(keys[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.padded_vocab), jnp.float32)
+            * (cfg.d_model ** -0.5))
+    if cfg.frontend is not None:
+        p["frontend_proj"] = L._dense_init(
+            keys[2], (cfg.d_model, cfg.d_model), cfg.d_model)
+
+    if cfg.enc_dec is not None:
+        ek = jax.random.split(keys[3], cfg.enc_dec.n_enc_layers)
+        p["enc_blocks"] = (jax.vmap(
+            lambda k: _init_block(cfg, "attn+mlp", k))(ek),)
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+        dk = jax.random.split(keys[4], cfg.n_layers)
+        p["blocks"] = (jax.vmap(lambda k: _init_dec_xblock(cfg, k))(dk),)
+    else:
+        bk = jax.random.split(keys[4], R)
+        blocks = []
+        for i, kind in enumerate(pattern):
+            kk = jax.vmap(lambda k, i=i: jax.random.fold_in(k, i))(bk)
+            blocks.append(jax.vmap(
+                lambda k, kind=kind: _init_block(cfg, kind, k))(kk))
+        p["blocks"] = tuple(blocks)
+    return p
+
+
+def param_axes(cfg: ArchConfig) -> Params:
+    from repro import sharding as shd
+    pattern, _ = cfg.scan_groups()
+    ax: Params = {
+        "embed": ("vocab_in", "embed_in"),
+        "final_norm": L.rmsnorm_axes(),
+    }
+    if not cfg.tie_embeddings:
+        ax["unembed"] = ("embed", "vocab")
+    if cfg.frontend is not None:
+        ax["frontend_proj"] = ("embed", None)
+    if cfg.enc_dec is not None:
+        ax["enc_blocks"] = (shd.stack_axes(_block_axes(cfg, "attn+mlp")),)
+        ax["enc_norm"] = L.rmsnorm_axes()
+        ax["blocks"] = (shd.stack_axes(_dec_xblock_axes(cfg)),)
+    else:
+        ax["blocks"] = tuple(shd.stack_axes(_block_axes(cfg, kind))
+                             for kind in pattern)
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Embedding front
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+                  dtype) -> jax.Array:
+    from repro import sharding as shd
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embed"], tokens, dtype)
+    if cfg.frontend == "patch_stub":
+        n = cfg.n_prefix_tokens
+        patches = jnp.einsum("bnd,de->bne", batch["patches"].astype(dtype),
+                             params["frontend_proj"].astype(dtype))
+        h = jnp.concatenate([patches, h[:, n:]], axis=1)
+    if cfg.positional == "sinusoidal":
+        h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(dtype)
+    return shd.constrain_batch(h)
+
+
+# ---------------------------------------------------------------------------
+# Block application (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_block(cfg: ArchConfig, kind: str, p: Params, h, aux, *,
+                 mode: str, cache_len: int = 0, q_chunk: int = 512,
+                 unroll: bool = False):
+    """mode: 'train' | 'prefill'. Returns (h, aux, new_cache|None)."""
+    mixer, ff = kind.split("+")
+    new_cache = None
+    if mixer == "attn":
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        kw = dict(n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+                  qk_norm=cfg.qk_norm, use_rope=cfg.positional == "rope",
+                  q_chunk=q_chunk, unroll=unroll)
+        if mode == "prefill":
+            attn_out, kv = L.attention_prefill(p["attn"], x,
+                                               cache_len=cache_len, **kw)
+            new_cache = {"k": kv[0], "v": kv[1]}
+        else:
+            attn_out = L.attention_fwd(p["attn"], x, causal=True, **kw)
+        h = h + attn_out
+    else:
+        x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        if mode == "prefill":
+            out, st = SSM.ssm_fwd(p["ssm"], x, cfg.d_model, cfg.ssm,
+                                  return_state=True, unroll=unroll)
+            new_cache = st
+        else:
+            out = SSM.ssm_fwd(p["ssm"], x, cfg.d_model, cfg.ssm,
+                              unroll=unroll)
+        h = h + out
+    if ff == "mlp":
+        h = h + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+    elif ff == "moe":
+        y, a = MOE.moe_fwd(p["moe"], L.rmsnorm(p["ln2"], h, cfg.norm_eps),
+                           cfg.moe)
+        h = h + y
+        aux = aux + a
+    return h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) — logits over the full sequence
+# ---------------------------------------------------------------------------
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            compute_dtype=jnp.bfloat16, remat: str = "none",
+            q_chunk: int = 512, unroll: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    from repro import sharding as shd
+    dtype = compute_dtype
+    h = _embed_inputs(cfg, params, batch, dtype)
+
+    if cfg.enc_dec is not None:
+        enc_h = _encoder_fwd(cfg, params, batch, dtype, remat, q_chunk, unroll)
+        h = _decoder_fwd_full(cfg, params, h, enc_h, remat, q_chunk, unroll)
+        aux = jnp.float32(0.0)
+    else:
+        pattern, _ = cfg.scan_groups()
+
+        def group_body(carry, group_params):
+            hh, aux = carry
+            for kind, p in zip(pattern, group_params):
+                hh, aux, _ = _apply_block(cfg, kind, p, hh, aux,
+                                          mode="train", q_chunk=q_chunk,
+                                          unroll=unroll)
+            hh = shd.constrain_batch(hh)
+            return (hh, aux), None
+
+        body = _maybe_remat(group_body, remat)
+        (h, aux) = _scan_groups(body, (h, jnp.float32(0.0)),
+                                params["blocks"], unroll)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.logits_fwd(table, h, cfg.tie_embeddings, cfg.vocab_size)
+    return shd.constrain_batch(logits, extra=("model",)), aux
+
+
+def _scan_groups(body, carry, blocks, unroll: bool):
+    """lax.scan over stacked layer groups, or a python loop when `unroll`
+    (used by the dry-run cost variants for exact trip-count accounting)."""
+    if not unroll:
+        carry, _ = jax.lax.scan(body, carry, blocks)
+        return carry
+    R = jax.tree.leaves(blocks)[0].shape[0]
+    for r in range(R):
+        carry, _ = body(carry, jax.tree.map(lambda x: x[r], blocks))
+    return carry
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save nothing, recompute all
+
+
+def _encoder_fwd(cfg, params, batch, dtype, remat, q_chunk, unroll=False):
+    frames = batch["frames"].astype(dtype)
+    h = jnp.einsum("bsd,de->bse", frames, params["frontend_proj"].astype(dtype))
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model).astype(dtype)
+
+    def body(hh, p):
+        x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+        hh = hh + L.attention_fwd(
+            p["attn"], x, n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, causal=False, use_rope=False,
+            q_chunk=q_chunk, unroll=unroll)
+        hh = hh + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], hh, cfg.norm_eps))
+        return hh, None
+
+    h = _scan_groups(_maybe_remat(body, remat), h,
+                     params["enc_blocks"][0], unroll)
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decoder_fwd_full(cfg, params, h, enc_h, remat, q_chunk, unroll=False):
+    def body(hh, p):
+        x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+        hh = hh + L.attention_fwd(
+            p["attn"], x, n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, causal=True, use_rope=False,
+            q_chunk=q_chunk, unroll=unroll)
+        x = L.rmsnorm(p["ln_x"], hh, cfg.norm_eps)
+        # cross-attention: kv from encoder output
+        kx = jnp.einsum("bsd,dhk->bshk", enc_h, p["xattn"]["wk"].astype(enc_h.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_h, p["xattn"]["wv"].astype(enc_h.dtype))
+        hh = hh + L.attention_fwd(
+            p["xattn"], x, n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, causal=False, use_rope=False,
+            kv_override=(kx, vx), q_chunk=q_chunk, unroll=unroll)
+        hh = hh + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], hh, cfg.norm_eps))
+        return hh, None
+
+    return _scan_groups(_maybe_remat(body, remat), h, params["blocks"][0],
+                        unroll)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            compute_dtype=jnp.bfloat16, remat: str = "none",
+            q_chunk: int = 512, unroll: bool = False):
+    logits, aux = forward(cfg, params, batch, compute_dtype=compute_dtype,
+                          remat=remat, q_chunk=q_chunk, unroll=unroll)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    # one-hot contraction instead of take_along_axis: a gather over the
+    # model-sharded vocab dim forces SPMD rematerialization; the einsum
+    # partitions cleanly (and XLA fuses the one-hot into the reduction).
+    V = logits.shape[-1]
+    onehot = jax.nn.one_hot(safe, V, dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    nll = lse - label_logit
+    n_valid = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / n_valid
+    return loss + aux, {"loss": loss, "aux_loss": aux,
+                        "n_tokens": n_valid.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> Any:
+    pattern, R = cfg.scan_groups()
+    if cfg.enc_dec is not None:
+        e = cfg.enc_dec
+        kv = lambda s: jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads,
+                                  cfg.head_dim), dtype)
+        return ({"k": kv(cache_len), "v": kv(cache_len),
+                 "xk": kv(e.enc_seq), "xv": kv(e.enc_seq)},)
+    caches = []
+    for kind in pattern:
+        mixer = kind.split("+")[0]
+        if mixer == "attn":
+            shape = (R, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+            caches.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
+        else:
+            st = SSM.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (R,) + x.shape), st))
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# Prefill — full forward that also writes the cache; returns last logits
+# ---------------------------------------------------------------------------
+def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            cache_len: int, *, compute_dtype=jnp.bfloat16, q_chunk: int = 512,
+            unroll: bool = False):
+    from repro import sharding as shd
+    dtype = compute_dtype
+    h = _embed_inputs(cfg, params, batch, dtype)
+
+    if cfg.enc_dec is not None:
+        enc_h = _encoder_fwd(cfg, params, batch, dtype, "none", q_chunk,
+                             unroll)
+        return _encdec_prefill(cfg, params, h, enc_h, cache_len, q_chunk,
+                               unroll)
+
+    pattern, _ = cfg.scan_groups()
+
+    def group_body(carry, group_params):
+        hh, aux = carry
+        new_caches = []
+        for kind, p in zip(pattern, group_params):
+            hh, aux, c = _apply_block(cfg, kind, p, hh, aux, mode="prefill",
+                                      cache_len=cache_len, q_chunk=q_chunk,
+                                      unroll=unroll)
+            new_caches.append(c)
+        hh = shd.constrain_batch(hh)
+        return (hh, aux), tuple(new_caches)
+
+    if unroll:
+        R = jax.tree.leaves(params["blocks"])[0].shape[0]
+        carry = (h, jnp.float32(0.0))
+        caches = []
+        for r in range(R):
+            carry, c = group_body(
+                carry, jax.tree.map(lambda x: x[r], params["blocks"]))
+            caches.append(c)
+        (h, aux) = carry
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        (h, aux), cache = jax.lax.scan(group_body, (h, jnp.float32(0.0)),
+                                       params["blocks"])
+    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.logits_fwd(table, h, cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+    return logits, cache
+
+
+def _encdec_prefill(cfg, params, h, enc_h, cache_len, q_chunk, unroll=False):
+    dtype = h.dtype
+
+    def body(hh, p):
+        x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+        attn_out, kv = L.attention_prefill(
+            p["attn"], x, n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, use_rope=False, cache_len=cache_len,
+            q_chunk=q_chunk)
+        hh = hh + attn_out
+        x = L.rmsnorm(p["ln_x"], hh, cfg.norm_eps)
+        kx = jnp.einsum("bsd,dhk->bshk", enc_h, p["xattn"]["wk"].astype(dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_h, p["xattn"]["wv"].astype(dtype))
+        hh = hh + L.attention_fwd(
+            p["xattn"], x, n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, causal=False, use_rope=False,
+            kv_override=(kx, vx), q_chunk=q_chunk)
+        hh = hh + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], hh, cfg.norm_eps))
+        return hh, {"k": kv[0], "v": kv[1], "xk": kx, "xv": vx}
+
+    if unroll:
+        R = jax.tree.leaves(params["blocks"][0])[0].shape[0]
+        caches = []
+        for r in range(R):
+            h, c = body(h, jax.tree.map(lambda x: x[r], params["blocks"][0]))
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        h, cache = jax.lax.scan(body, h, params["blocks"][0])
+    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.logits_fwd(table, h, cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+    return logits, (cache,)
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token with cache
+# ---------------------------------------------------------------------------
+def decode_step(cfg: ArchConfig, params: Params, cache: Any,
+                token: jax.Array, pos, *, compute_dtype=jnp.bfloat16,
+                unroll: bool = False):
+    """token: [B, 1] int32; pos: scalar int32 (current write index)."""
+    dtype = compute_dtype
+    h = L.embed_tokens(params["embed"], token, dtype)
+    if cfg.positional == "sinusoidal":
+        h = h + L.sinusoidal_positions(1, cfg.d_model, offset=pos).astype(dtype)
+
+    if cfg.enc_dec is not None:
+        return _encdec_decode(cfg, params, cache, h, pos, unroll)
+
+    pattern, _ = cfg.scan_groups()
+
+    def group_body(hh, xs):
+        group_params, group_cache = xs
+        new_caches = []
+        for kind, p, c in zip(pattern, group_params, group_cache):
+            mixer, ff = kind.split("+")
+            if mixer == "attn":
+                x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+                out, (k, v) = L.attention_decode(
+                    p["attn"], x, (c["k"], c["v"]), pos, theta=cfg.rope_theta,
+                    qk_norm=cfg.qk_norm, use_rope=cfg.positional == "rope")
+                hh = hh + out
+                new_caches.append({"k": k, "v": v})
+            else:
+                x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+                out, st = SSM.ssm_decode(p["ssm"], x, c, cfg.d_model, cfg.ssm)
+                hh = hh + out
+                new_caches.append(st)
+            if ff == "mlp":
+                hh = hh + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], hh,
+                                                        cfg.norm_eps))
+            elif ff == "moe":
+                y, _ = MOE.moe_fwd(p["moe"], L.rmsnorm(p["ln2"], hh,
+                                                       cfg.norm_eps), cfg.moe)
+                hh = hh + y
+        return hh, tuple(new_caches)
+
+    h, new_cache = _scan_with_cache(group_body, h, params["blocks"], cache,
+                                    unroll)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.logits_fwd(table, h, cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+    return logits, new_cache
+
+
+def _scan_with_cache(body, h, blocks, cache, unroll: bool):
+    """scan carrying h with (params, cache) as xs and new cache as ys."""
+    if not unroll:
+        return jax.lax.scan(body, h, (blocks, cache))
+    R = jax.tree.leaves(blocks)[0].shape[0]
+    outs = []
+    for r in range(R):
+        h, c = body(h, jax.tree.map(lambda x: x[r], (blocks, cache)))
+        outs.append(c)
+    return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def _encdec_decode(cfg, params, cache, h, pos, unroll=False):
+    def body(hh, xs):
+        p, c = xs
+        x = L.rmsnorm(p["ln1"], hh, cfg.norm_eps)
+        out, (k, v) = L.attention_decode(
+            p["attn"], x, (c["k"], c["v"]), pos, theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, use_rope=False)
+        hh = hh + out
+        x = L.rmsnorm(p["ln_x"], hh, cfg.norm_eps)
+        hh = hh + L.attention_readonly(
+            p["xattn"], x, (c["xk"], c["xv"]),
+            qk_norm=cfg.qk_norm)
+        hh = hh + L.mlp_fwd(p["mlp"], L.rmsnorm(p["ln2"], hh, cfg.norm_eps))
+        return hh, {"k": k, "v": v, "xk": c["xk"], "xv": c["xv"]}
+
+    h, new_cache = _scan_with_cache(body, h, params["blocks"][0], cache[0],
+                                    unroll)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.logits_fwd(table, h, cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+    return logits, (new_cache,)

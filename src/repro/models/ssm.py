@@ -1,0 +1,250 @@
+"""Mamba-2 SSD (state-space duality) mixer, TPU-adapted.
+
+The selective scan is recast as *chunked matmuls* (the SSD formulation,
+arXiv:2405.21060) so the inner loops are MXU-shaped batched GEMMs:
+  - within-chunk: (C·Bᵀ ⊙ decay-mask) · X   — dense [Q,Q] per chunk
+  - across-chunk: state recurrence over chunk summaries (lax.scan)
+This pure-jnp implementation is the oracle for kernels/ssd_scan and the
+XLA path used by mamba2-1.3b and jamba's Mamba layers.
+
+Projections are kept separate (z, x, B, C, dt) rather than one fused
+in_proj so each output axis has a clean TP sharding (d_inner → "model";
+B/C/dt are small and replicated) — fusing them would put the TP shard
+boundary mid-concat and force GSPMD resharding at every split.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SSMConfig
+from repro.models.layers import _dense_init
+
+Params = dict
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig) -> Params:
+    din = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N = cfg.n_groups, cfg.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": _dense_init(ks[0], (d_model, din), d_model),
+        "w_x": _dense_init(ks[1], (d_model, din), d_model),
+        "w_B": _dense_init(ks[2], (d_model, G * N), d_model),
+        "w_C": _dense_init(ks[3], (d_model, G * N), d_model),
+        "w_dt": _dense_init(ks[4], (d_model, H), d_model),
+        "conv_x": _dense_init(ks[5], (cfg.d_conv, din), cfg.d_conv),
+        "conv_BC": _dense_init(ks[6], (cfg.d_conv, 2 * G * N), cfg.d_conv),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((din,), jnp.float32),
+        "out_proj": _dense_init(ks[7], (din, d_model), din),
+    }
+
+
+def ssm_axes() -> Params:
+    return {
+        "w_z": ("embed", "ssm_inner"),
+        "w_x": ("embed", "ssm_inner"),
+        "w_B": ("embed", None),
+        "w_C": ("embed", None),
+        "w_dt": ("embed", None),
+        "conv_x": (None, "ssm_inner"),
+        "conv_BC": (None, None),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D": (None,),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(u: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via tap shifts. u: [B, L, C]; conv_w: [K, C]."""
+    K = conv_w.shape[0]
+    out = u * conv_w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * conv_w[K - 1 - i]
+    return jax.nn.silu(out)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """segsum(a)[..., i, j] = sum_{j < k <= i} a_k  (−inf above diagonal)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+                C: jax.Array, chunk: int, h0=None, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B, L, H, P]; dt: [B, L, H] (post-softplus, fp32); A: [H] (negative);
+    B_, C: [B, L, G, N]. Returns (y [B, L, H, P], h_final [B, H, P, N]).
+    """
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    if L % Q:
+        Q = L
+    Nc = L // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bb, Nc, Q, H, P)
+    dtc = dt.reshape(Bb, Nc, Q, H).astype(f32)
+    Bc = B_.reshape(Bb, Nc, Q, G, N)
+    Cc = C.reshape(Bb, Nc, Q, G, N)
+
+    a = dtc * A                                          # [B, Nc, Q, H]
+    a_hq = jnp.moveaxis(a, -1, -2)                       # [B, Nc, H, Q]
+    seg = _segsum(a_hq)                                  # [B, Nc, H, Q, Q]
+    cum = jnp.cumsum(a_hq, axis=-1)                      # [B, Nc, H, Q]
+
+    # --- diagonal (within-chunk) term ---------------------------------------
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc.astype(f32), Bc.astype(f32))
+    CB = jnp.repeat(CB, rep, axis=2)                     # [B, Nc, H, Q, Q]
+    M = CB * jnp.exp(seg) * jnp.moveaxis(dtc, -1, -2)[..., None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(x.dtype), xc)
+
+    # --- chunk state summaries ----------------------------------------------
+    decay_out = jnp.exp(cum[..., -1:] - cum)             # [B, Nc, H, Q]
+    wB = (jnp.repeat(Bc.astype(f32), rep, axis=3).reshape(Bb, Nc, Q, H, N)
+          * (dtc * jnp.moveaxis(decay_out, -1, -2))[..., None])
+    S = jnp.einsum("bcqhn,bcqhp->bchpn", wB.astype(x.dtype), xc)  # [B,Nc,H,P,N]
+
+    # --- cross-chunk recurrence ----------------------------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                  # [B, Nc, H]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), x.dtype)
+
+    def step(h, inp):
+        S_c, dec_c = inp
+        h_enter = h
+        h_new = h * dec_c[..., None, None].astype(x.dtype) + S_c
+        return h_new, h_enter
+
+    S_seq = jnp.moveaxis(S, 1, 0)
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)
+    if unroll:
+        h = h0
+        entries = []
+        for c in range(Nc):
+            h, h_in = step(h, (S_seq[c], dec_seq[c]))
+            entries.append(h_in)
+        h_final, h_enter = h, jnp.stack(entries)
+    else:
+        h_final, h_enter = jax.lax.scan(step, h0, (S_seq, dec_seq))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                # [B, Nc, H, P, N]
+
+    # --- off-diagonal (carry-in) term ----------------------------------------
+    Cin = (jnp.repeat(Cc.astype(f32), rep, axis=3).reshape(Bb, Nc, Q, H, N)
+           * jnp.exp(jnp.moveaxis(cum, -1, -2))[..., None])
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", Cin.astype(x.dtype), h_enter)
+
+    y = (y_diag + y_off).reshape(Bb, L, H, P)
+    return y, h_final
+
+
+def _gated_out(params, y: jax.Array, z: jax.Array, dtype) -> jax.Array:
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm"]).astype(dtype)
+    return jnp.einsum("bld,dp->blp", y, params["out_proj"].astype(dtype))
+
+
+def ssm_fwd(params: Params, x: jax.Array, d_model: int, cfg: SSMConfig,
+            return_state: bool = False, unroll: bool = False):
+    """Full-sequence Mamba-2 block. x: [B, L, d_model]."""
+    dtype = x.dtype
+    Bb, L, _ = x.shape
+    H, P = cfg.n_heads(d_model), cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    din = cfg.d_inner(d_model)
+
+    z = jnp.einsum("bld,dp->blp", x, params["w_z"].astype(dtype))
+    xr = jnp.einsum("bld,dp->blp", x, params["w_x"].astype(dtype))
+    BCr = jnp.concatenate(
+        [jnp.einsum("bld,dp->blp", x, params["w_B"].astype(dtype)),
+         jnp.einsum("bld,dp->blp", x, params["w_C"].astype(dtype))], axis=-1)
+    dt_raw = jnp.einsum("bld,dp->blp", x, params["w_dt"].astype(dtype))
+
+    xconv = _causal_conv(xr, params["conv_x"].astype(dtype))
+    BC = _causal_conv(BCr, params["conv_BC"].astype(dtype))
+    xs = xconv.reshape(Bb, L, H, P)
+    B_ = BC[..., : G * N].reshape(Bb, L, G, N)
+    C = BC[..., G * N:].reshape(Bb, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, h_final = ssd_chunked(xs, dt, A, B_, C, cfg.chunk_size, unroll=unroll)
+    y = y + xs * params["D"].astype(dtype)[None, None, :, None]
+    out = _gated_out(params, y.reshape(Bb, L, din), z, dtype)
+
+    if return_state:
+        tail = cfg.d_conv - 1
+        conv_state = jnp.concatenate([xr[:, -tail:], BCr[:, -tail:]], axis=-1)
+        return out, {"conv": conv_state, "h": h_final}
+    return out
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> Params:
+    H, P = cfg.n_heads(d_model), cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    din = cfg.d_inner(d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, din + 2 * G * N), dtype),
+        "h": jnp.zeros((batch, H, P, N), dtype),
+    }
+
+
+def ssm_decode(params: Params, x: jax.Array, cache: Params, d_model: int,
+               cfg: SSMConfig):
+    """Single-token state update. x: [B, 1, d_model]."""
+    dtype = x.dtype
+    Bb = x.shape[0]
+    H, P = cfg.n_heads(d_model), cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    din = cfg.d_inner(d_model)
+
+    z = jnp.einsum("bld,dp->blp", x, params["w_z"].astype(dtype))
+    xr = jnp.einsum("bld,dp->blp", x, params["w_x"].astype(dtype))
+    BCr = jnp.concatenate(
+        [jnp.einsum("bld,dp->blp", x, params["w_B"].astype(dtype)),
+         jnp.einsum("bld,dp->blp", x, params["w_C"].astype(dtype))], axis=-1)
+    dt_raw = jnp.einsum("bld,dp->blp", x, params["w_dt"].astype(dtype))
+
+    # conv over [cached K-1 inputs, current]
+    new_row = jnp.concatenate([xr, BCr], axis=-1)          # [B, 1, din+2GN]
+    window = jnp.concatenate([cache["conv"], new_row], axis=1)  # [B, K, C]
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_BC"]], axis=-1).astype(dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, conv_w))
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., :din].reshape(Bb, H, P)
+    B_ = conv_out[..., din: din + G * N].reshape(Bb, G, N)
+    C = conv_out[..., din + G * N:].reshape(Bb, G, N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    rep = H // G
+
+    decay = jnp.exp(dt * A)                                # [B, H]
+    Bh = jnp.repeat(B_, rep, axis=1)                       # [B, H, N]
+    dBx = (dt[..., None, None] * Bh[:, :, None, :].astype(jnp.float32)
+           * xs[..., None].astype(jnp.float32))            # [B, H, P, N]
+    h = cache["h"].astype(jnp.float32) * decay[..., None, None] + dBx
+    Ch = jnp.repeat(C, rep, axis=1)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32)).astype(dtype)
+    y = y + xs * params["D"].astype(dtype)[None, :, None]
+    out = _gated_out(params, y.reshape(Bb, 1, din), z, dtype)
+    return out, {"conv": new_conv, "h": h.astype(dtype)}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.clipping import global_norm, clip_by_global_norm

@@ -1,0 +1,60 @@
+"""AdamW with fp32 master moments, decoupled weight decay.
+
+State is a pytree mirroring params — GSPMD shards it identically to the
+params (ZeRO-style: sharded over "data" via the FSDP rules), so optimizer
+memory scales down with the mesh like the weights do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    """moment_dtype=bfloat16 halves optimizer memory (the §Perf Cell B
+    queued lever for 70B-class training on 16 GiB chips); updates still
+    accumulate through fp32 inside adamw_update."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        mdt = m.dtype
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    outs = [upd(g, m, v, p)
+            for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)

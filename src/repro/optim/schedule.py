@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak_lr: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak_lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int,
+                    peak_lr: float, final_lr_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak_lr)
+    t = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0, 1)
+    cos = final_lr_frac + (1 - final_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,17 @@
+"""Edge-based Data Science pipeline services (paper §3, Fig. 1-2).
+
+Services implement big data/stream operators (aggregation, analytics) and
+compose into pipelines by data-flow mash-up. Each service follows the
+paper's architecture: Fetch → buffer (with a data-management strategy) →
+OperatorLogic → Sink, driven by a recurrence scheduler. Services run on
+the EDGE (host NumPy/JAX-CPU) and spill to the VDC just in time when the
+task outgrows the edge (queries.py).
+"""
+from repro.pipeline.streams import Broker, StreamProducer, NeubotFarm
+from repro.pipeline.store import TimeSeriesStore
+from repro.pipeline.service import StreamService, ServiceConfig
+from repro.pipeline.operators import (WindowSpec, aggregate, kmeans,
+                                      linear_regression)
+from repro.pipeline.composition import Pipeline
+from repro.pipeline.queries import (neubot_query_1, neubot_query_2,
+                                    HybridExecutor)

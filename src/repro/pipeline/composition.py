@@ -1,0 +1,43 @@
+"""Pipeline mash-up (paper §3): services compose by connecting Sinks to
+Fetches, expressing a data flow. A Pipeline advances all producers, then
+all services in topological order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.pipeline.service import StreamService
+from repro.pipeline.streams import Broker, NeubotFarm
+
+
+class Pipeline:
+    def __init__(self, broker: Broker):
+        self.broker = broker
+        self.farms: List[NeubotFarm] = []
+        self.services: List[StreamService] = []
+
+    def add_farm(self, farm: NeubotFarm) -> "Pipeline":
+        self.farms.append(farm)
+        return self
+
+    def add_service(self, svc: StreamService) -> "Pipeline":
+        self.services.append(svc)
+        return self
+
+    def connect(self, upstream: StreamService, downstream_queue: str) -> None:
+        """Sink of `upstream` republishes into `downstream_queue`."""
+        q = self.broker.queue(downstream_queue)
+
+        def sink(res: Dict) -> None:
+            from repro.pipeline.streams import Record
+            q.publish(Record(ts=res["ts"], values={"value": res["value"]}))
+
+        upstream.connect(sink)
+
+    def advance_to(self, ts: float) -> Dict[str, List[Dict]]:
+        for farm in self.farms:
+            farm.advance_to(ts)
+        out: Dict[str, List[Dict]] = {}
+        for svc in self.services:
+            out[svc.cfg.name] = svc.run_until(ts)
+        return out

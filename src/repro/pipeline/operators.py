@@ -1,0 +1,88 @@
+"""Big data/stream operators (paper §3): windowed aggregations and the
+analytics services (k-means, linear regression) implemented in JAX so the
+same operator runs on the edge (CPU) or a VDC submesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    kind: str          # sliding | landmark
+    width_s: float     # window width (ignored for landmark)
+    slide_s: float     # recurrence / stride
+
+
+def aggregate(values: np.ndarray, agg: str) -> float:
+    """Edge-path aggregation over one window (numpy, tiny)."""
+    if len(values) == 0:
+        return float("nan")
+    return float({"max": np.max, "min": np.min, "mean": np.mean,
+                  "sum": np.sum, "count": len}[agg](values))
+
+
+@jax.jit
+def _kmeans_step(centers, xs):
+    d = jnp.sum((xs[:, None, :] - centers[None]) ** 2, -1)
+    assign = jnp.argmin(d, axis=1)
+    onehot = jax.nn.one_hot(assign, centers.shape[0], dtype=xs.dtype)
+    counts = jnp.maximum(onehot.sum(0), 1.0)
+    new = (onehot.T @ xs) / counts[:, None]
+    return new, assign
+
+
+def kmeans(xs: jnp.ndarray, k: int, iters: int = 20, seed: int = 0
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Lloyd's k-means (the paper's analytics service example)."""
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.choice(key, xs.shape[0], (k,), replace=False)
+    centers = xs[idx]
+    for _ in range(iters):
+        centers, assign = _kmeans_step(centers, xs)
+    return centers, assign
+
+
+def linear_regression(x: jnp.ndarray, y: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """OLS fit via normal equations (analytics service)."""
+    X = jnp.stack([jnp.ones_like(x), x], axis=1)
+    beta = jnp.linalg.solve(X.T @ X, X.T @ y)
+    resid = y - X @ beta
+    return beta, resid
+
+
+# ---------------------------------------------------------------------------
+# CNN analytics service (the paper's §3 operator list includes CNN): a tiny
+# 1-D conv classifier over fixed-length measurement windows — e.g. labeling
+# connectivity traces as {stable, degraded, bursty}. Same JAX code runs on
+# the edge or a VDC submesh.
+# ---------------------------------------------------------------------------
+def init_cnn_classifier(key, window: int = 64, n_classes: int = 3,
+                        channels: int = 8):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": jax.random.normal(k1, (5, 1, channels)) * 0.3,
+        "conv2": jax.random.normal(k2, (5, channels, channels)) * 0.2,
+        "head": jax.random.normal(k3, (channels, n_classes)) * 0.3,
+    }
+
+
+def cnn_classify(params, windows: jnp.ndarray) -> jnp.ndarray:
+    """windows: [B, T] series → logits [B, n_classes]. Standardizes per
+    window; max-pools over time (bursts are sparse events)."""
+    mu = jnp.mean(windows, axis=1, keepdims=True)
+    sd = jnp.std(windows, axis=1, keepdims=True) + 1e-6
+    x = ((windows - mu) / sd)[..., None]                      # [B, T, 1]
+    for w in (params["conv1"], params["conv2"]):
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(2,), padding="SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        x = jax.nn.relu(x)
+    pooled = jnp.max(x, axis=1)                               # [B, C]
+    return pooled @ params["head"]

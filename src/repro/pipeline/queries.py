@@ -1,0 +1,96 @@
+"""The paper's use-case queries (§3) and the just-in-time edge→VDC offload.
+
+  Q1: EVERY 60 s compute the MAX of download_speed over the last 3 min
+      FROM cassandra series speedtests AND streaming queue neubotspeed
+  Q2: EVERY 5 min compute the MEAN of download_speed over the last 120 d
+      FROM the same sources
+
+Both mash a post-mortem store range with the live stream. The
+HybridExecutor is the paper's "services interact with the VDC underlying
+services only when the process needs more resources": windows whose record
+count fits the edge budget aggregate in the service loop (NumPy on host);
+larger windows offload to the VDC path — the Pallas window_agg kernel
+(+ its roofline-costed submesh, scheduled like any other task).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.window_agg import window_aggregate
+from repro.pipeline.operators import WindowSpec, aggregate
+from repro.pipeline.service import ServiceConfig, StreamService
+from repro.pipeline.store import TimeSeriesStore
+from repro.pipeline.streams import Broker
+
+EDGE_WINDOW_BUDGET = 100_000  # records an edge service may aggregate inline
+
+
+def neubot_query_1(broker: Broker, store: TimeSeriesStore) -> StreamService:
+    return StreamService(ServiceConfig(
+        name="q1_max_speed", queue="neubotspeed", column="download_speed",
+        agg="max", window=WindowSpec("sliding", width_s=180.0, slide_s=60.0),
+        store=store), broker)
+
+
+def neubot_query_2(broker: Broker, store: TimeSeriesStore) -> StreamService:
+    return StreamService(ServiceConfig(
+        name="q2_mean_speed", queue="neubotspeed", column="download_speed",
+        agg="mean",
+        window=WindowSpec("sliding", width_s=120 * 86400.0, slide_s=300.0),
+        store=store), broker)
+
+
+@dataclasses.dataclass
+class OffloadDecision:
+    offload: bool
+    n_records: int
+    reason: str
+
+
+class HybridExecutor:
+    """Runs a service's window either on the edge or on the VDC path."""
+
+    def __init__(self, edge_budget: int = EDGE_WINDOW_BUDGET):
+        self.edge_budget = edge_budget
+        self.offloads = 0
+        self.edge_runs = 0
+
+    def decide(self, n_records: int) -> OffloadDecision:
+        if n_records <= self.edge_budget:
+            return OffloadDecision(False, n_records,
+                                   f"fits edge budget ({self.edge_budget})")
+        return OffloadDecision(True, n_records,
+                               "window exceeds edge compute/RAM — VDC JIT")
+
+    def run_window(self, values: np.ndarray, agg: str, *,
+                   stride: Optional[int] = None) -> float:
+        d = self.decide(len(values))
+        if not d.offload:
+            self.edge_runs += 1
+            return aggregate(values, agg)
+        self.offloads += 1
+        # VDC path: fold the 1-D range into the TPU's 128 lanes so the
+        # Pallas segment kernel reduces rows in parallel, then combine the
+        # 128 per-lane partials.
+        from repro.kernels.window_agg.kernel import INIT
+        base = "sum" if agg == "mean" else agg
+        n = len(values)
+        cols = 128
+        rows = -(-n // cols)
+        fill = 0.0 if agg == "mean" else INIT[base]
+        x = np.full((rows * cols,), fill, np.float32)
+        x[:n] = values
+        x2 = jnp.asarray(x).reshape(rows, cols)
+        seg = window_aggregate(x2, agg=base, window=rows, stride=rows,
+                               interpret=True)[0]          # [128]
+        if agg == "max":
+            return float(jnp.max(seg))
+        if agg == "min":
+            return float(jnp.min(seg))
+        total = float(jnp.sum(seg))
+        return total / n if agg == "mean" else total

@@ -1,0 +1,104 @@
+"""Stream transport: an in-process broker with the RabbitMQ semantics the
+paper deploys (named queues, bounded capacity, consumer offsets) and IoT
+producers that generate Neubot-shaped network-test records (DESIGN §8:
+the original dataset is not shipped; records are synthetic but share the
+schema: timestamp, download_speed, upload_speed, latency, connection_type).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import random
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Record:
+    ts: float
+    values: Dict[str, float]
+
+
+class Queue:
+    """Bounded FIFO with per-consumer offsets (retained until all consume)."""
+
+    def __init__(self, name: str, capacity: int = 65536):
+        self.name = name
+        self.capacity = capacity
+        self.buf: Deque[Record] = collections.deque()
+        self.base_seq = 0              # seq of buf[0]
+        self.offsets: Dict[str, int] = {}
+        self.dropped = 0
+
+    def publish(self, rec: Record) -> None:
+        if len(self.buf) >= self.capacity:
+            self.buf.popleft()
+            self.base_seq += 1
+            self.dropped += 1
+        self.buf.append(rec)
+
+    def register(self, consumer: str) -> None:
+        self.offsets.setdefault(consumer, self.base_seq + len(self.buf))
+
+    def fetch(self, consumer: str, max_n: int = 1 << 30) -> List[Record]:
+        off = self.offsets.get(consumer, self.base_seq)
+        off = max(off, self.base_seq)
+        start = off - self.base_seq
+        out = list(self.buf)[start:start + max_n]
+        self.offsets[consumer] = off + len(out)
+        return out
+
+
+class Broker:
+    def __init__(self):
+        self.queues: Dict[str, Queue] = {}
+
+    def queue(self, name: str, capacity: int = 65536) -> Queue:
+        if name not in self.queues:
+            self.queues[name] = Queue(name, capacity)
+        return self.queues[name]
+
+
+class StreamProducer:
+    """One 'thing' producing measurements at a fixed rate."""
+
+    def __init__(self, broker: Broker, queue: str, thing_id: int,
+                 rate_hz: float = 1.0, seed: int = 0):
+        self.q = broker.queue(queue)
+        self.thing_id = thing_id
+        self.period = 1.0 / rate_hz
+        self.rng = random.Random(seed * 7919 + thing_id)
+        self._next_t = 0.0
+
+    def _record(self, ts: float) -> Record:
+        base = 20e6 + 5e6 * math.sin(ts / 3600.0 + self.thing_id)
+        return Record(ts=ts, values={
+            "thing": float(self.thing_id),
+            "download_speed": max(0.1e6, self.rng.gauss(base, 4e6)),
+            "upload_speed": max(0.05e6, self.rng.gauss(base / 4, 1e6)),
+            "latency_ms": max(1.0, self.rng.gauss(30, 12)),
+            "connection_type": float(self.rng.choice([0, 1, 2])),
+        })
+
+    def advance_to(self, ts: float) -> int:
+        n = 0
+        while self._next_t <= ts:
+            self.q.publish(self._record(self._next_t))
+            self._next_t += self.period
+            n += 1
+        return n
+
+
+class NeubotFarm:
+    """An IoT farm of producers on one queue (the paper's clustered
+    RabbitMQ deployment, scaled by n_things)."""
+
+    def __init__(self, broker: Broker, queue: str = "neubotspeed",
+                 n_things: int = 8, rate_hz: float = 1.0, seed: int = 0):
+        self.producers = [StreamProducer(broker, queue, i, rate_hz, seed)
+                          for i in range(n_things)]
+
+    def advance_to(self, ts: float) -> int:
+        return sum(p.advance_to(ts) for p in self.producers)

@@ -1,0 +1,4 @@
+from repro.runtime.compression import (compress_int8, decompress_int8,
+                                       topk_compress, ErrorFeedbackState,
+                                       compressed_allreduce)
+from repro.runtime.straggler import StragglerMonitor, BackupStepPolicy

@@ -1,0 +1,81 @@
+"""Gradient compression for the slow inter-pod (DCN) all-reduce.
+
+Two composable schemes with error feedback (residual carry, Karimireddy
+et al. '19 style):
+  - int8 uniform quantization (4× over fp32, 2× over bf16)
+  - top-k sparsification (magnitude), k as a fraction
+
+`compressed_allreduce` wires them around a psum for use inside shard_map
+over the "pod" axis; on this container it is exercised in tests via a tiny
+mesh, and the dry-run's multi-pod profile can enable it per-config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- int8
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- top-k
+def topk_compress(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the top `frac` fraction by magnitude (dense mask form — the
+    wire format would transmit (indices, values); the mask form keeps the
+    math identical and jit-friendly)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+# ------------------------------------------------------- error feedback
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: Any
+
+    @classmethod
+    def init(cls, tree):
+        return cls(residual=jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tree))
+
+
+def compressed_allreduce(grads, ef: ErrorFeedbackState, axis_name: str, *,
+                         scheme: str = "int8", topk_frac: float = 0.05):
+    """psum(grads) over `axis_name` with compression + error feedback.
+    Call inside shard_map/pmap. Returns (mean_grads, new_ef)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, scale = compress_int8(gf)
+            sent = decompress_int8(q, scale)
+        elif scheme == "topk":
+            sent = topk_compress(gf, topk_frac)
+        elif scheme == "int8+topk":
+            sent = topk_compress(gf, topk_frac)
+            q, scale = compress_int8(sent)
+            sent = decompress_int8(q, scale)
+        else:
+            sent = gf
+        new_r = gf - sent
+        reduced = jax.lax.pmean(sent, axis_name)
+        return reduced.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, ErrorFeedbackState(residual=new_r)

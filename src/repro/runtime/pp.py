@@ -1,0 +1,75 @@
+"""GPipe-style pipeline parallelism over the "pod" axis.
+
+The multi-pod mesh's default profile is DP-over-pods (DESIGN §5); this
+module provides the alternative: layer groups are sharded over "pod" as
+pipeline stages, microbatches stream through via collective_permute, and
+the bubble is the usual (S-1)/(M+S-1).
+
+Implemented for the homogeneous-stack forward (the 40-cell archs all scan
+a uniform group); exercised by tests on a tiny (stages=2) mesh and by the
+dry-run as an optional profile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, n_stages: int, n_micro: int,
+                     mesh: Mesh, axis: str = "pod"):
+    """Build fn(stage_params, x) running `stage_fn` as a GPipe pipeline.
+
+    stage_params: pytree with leading axis n_stages (sharded over `axis`);
+    x: [n_micro, micro_batch, ...] microbatched inputs (replicated);
+    returns y: [n_micro, micro_batch, ...].
+
+    stage_fn(params_slice, h) -> h  must be shape-preserving (the
+    homogeneous-transformer case).
+    """
+    def fn(stage_params, x):
+        def shard_body(params_local, xs):
+            # params_local: [1, ...] this stage's slice; xs: full microbatches
+            stage = jax.lax.axis_index(axis)
+            p = jax.tree.map(lambda a: a[0], params_local)
+            M = xs.shape[0]
+            T = M + n_stages - 1
+            h = jnp.zeros_like(xs[0])
+            ys = jnp.zeros_like(xs)
+
+            def tick(carry, t):
+                h, ys = carry
+                # stage 0 ingests microbatch t (if any)
+                mb = jnp.clip(t, 0, M - 1)
+                h_in = jnp.where(stage == 0, xs[mb], h)
+                h_out = stage_fn(p, h_in)
+                # last stage emits microbatch (t - (S-1))
+                out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+                emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+                ys = jax.lax.cond(
+                    emit,
+                    lambda ys: jax.lax.dynamic_update_index_in_dim(
+                        ys, h_out, out_idx, 0),
+                    lambda ys: ys, ys)
+                # send h_out to the next stage (ring; last→0 discarded)
+                perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+                h_next = jax.lax.ppermute(h_out, axis, perm)
+                return (h_next, ys), None
+
+            (h, ys), _ = jax.lax.scan(tick, (h, ys), jnp.arange(T))
+            # only the last stage holds real outputs; broadcast via psum
+            ys = jnp.where(stage == n_stages - 1, ys, jnp.zeros_like(ys))
+            return jax.lax.psum(ys, axis)
+
+        in_specs = (jax.tree.map(lambda _: P(axis), stage_params,
+                                 is_leaf=lambda x: hasattr(x, "shape")),
+                    P())
+        return jax.shard_map(shard_body, mesh=mesh,
+                             in_specs=in_specs, out_specs=P(),
+                             check_vma=False)(stage_params, x)
+
+    return fn

@@ -1,0 +1,204 @@
+"""Logical-axis sharding rules and PartitionSpec builders.
+
+Every parameter/cache leaf carries a tuple of *logical* axis names (one per
+dim, None = never sharded). Profiles map logical names to mesh axes:
+
+  train:  FSDP over "data" (embed axis of weights), TP over "model"
+          (vocab/heads/mlp/experts/ssm_inner), DP over "pod"+"data" (batch)
+  serve:  TP-only weights (no FSDP — decode would all-gather per token),
+          batch over pod+data, KV cache per decode rules
+
+The builder is divisibility-aware: a logical axis whose dim does not divide
+its mesh axis is dropped (replicated) — this is what lets every assigned
+arch (9-head smollm, kv=8 GQA on a 16-way model axis, odd vocabs) compile
+on every mesh (DESIGN §4).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Set the framework-level mesh context (consumed by moe_fwd's shard_map
+    and act_constraint); does not touch jax's global mesh state."""
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# Rule profiles: logical axis -> preferred mesh axes (first that divides wins)
+# ---------------------------------------------------------------------------
+TRAIN_RULES: Dict[str, Tuple] = {
+    "embed": ("data",),            # FSDP / ZeRO-3 shard of the non-TP weight axis
+    "vocab": ("model",),
+    # input-embedding rows: vocab over model ONLY (no FSDP on the embed dim —
+    # a gather from a 2-axis-sharded table forces SPMD full rematerialization)
+    "vocab_in": ("model",),
+    "embed_in": (None,),
+    "heads": ("model",),
+    "kv_heads": ("model", None),
+    "head_dim": (None,),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "layers": (None,),
+    "conv": (None,),
+}
+
+SERVE_RULES: Dict[str, Tuple] = dict(TRAIN_RULES, embed=(None,))
+
+# batch=1 long-context decode: the data axis carries no batch work, so
+# weights spread over it too (memory; the all-gather rides an idle axis)
+SERVE_LONG_RULES: Dict[str, Tuple] = dict(TRAIN_RULES, embed=("data",))
+
+PROFILES = {"train": TRAIN_RULES, "serve": SERVE_RULES,
+            "serve_long": SERVE_LONG_RULES}
+
+
+def batch_axes_for(mesh: Mesh, batch: int):
+    """Largest prefix of data-like axes that divides `batch`."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    size = 1
+    for a in axes:
+        if batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[a] for a in name]))
+    return mesh.shape[name]
+
+
+def spec_for_leaf(mesh: Mesh, logical_axes, shape, rules) -> P:
+    """Map one leaf's logical axes to a PartitionSpec, dropping non-dividers."""
+    entries = []
+    used = set()
+    for dim, lax_name in zip(shape, logical_axes):
+        choice = None
+        if lax_name is not None:
+            for cand in rules.get(lax_name, (None,)):
+                if cand is None:
+                    continue
+                if cand in used:
+                    continue
+                if dim % _axis_size(mesh, cand) == 0:
+                    choice = cand
+                    break
+        if choice is not None:
+            used.add(choice)
+        entries.append(choice)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def build_param_specs(mesh: Mesh, axes_tree, shape_tree, profile: str):
+    """axes_tree: pytree of tuples-of-logical-names (tuple leaves);
+    shape_tree: matching pytree of ShapeDtypeStructs/arrays."""
+    rules = PROFILES[profile]
+    flat_axes, treedef = jax.tree.flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and (
+            len(x) == 0 or x[0] is None or isinstance(x[0], str)))
+    flat_shapes = treedef.flatten_up_to(shape_tree)
+    specs = [spec_for_leaf(mesh, a, s.shape, rules)
+             for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def shardings_from_specs(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_axes(axes, extra: str = "layers"):
+    """Prepend the stacked-layers logical axis to every leaf tuple."""
+    return jax.tree.map(
+        lambda t: (extra,) + t, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and (
+            len(x) == 0 or x[0] is None or isinstance(x[0], str)))
+
+
+# ---------------------------------------------------------------------------
+# Activation / input / cache specs
+# ---------------------------------------------------------------------------
+def token_spec(mesh: Mesh, batch: int) -> P:
+    return P(batch_axes_for(mesh, batch), None)
+
+
+def constrain_batch(x, extra=()):
+    """Constrain a [B, ...] activation to batch sharding (identity w/o mesh).
+    `extra` optionally assigns trailing dims, e.g. ("model",) for logits."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    b_ax = batch_axes_for(mesh, x.shape[0])
+    rest = [None] * (x.ndim - 1 - len(extra)) + list(extra)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, *rest)))
+
+
+def act_constraint(x, spec: P):
+    """with_sharding_constraint when a mesh is active, else identity."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def kv_cache_spec(mesh: Mesh, batch: int, kv_heads: int, head_dim: int,
+                  long_context: bool = False) -> P:
+    """Spec for [layers, B, S, KV, dh] caches (decode rules, DESIGN §4).
+
+    kv_heads → model when divisible; otherwise the sequence dim takes the
+    model axis (flash-decoding-style split-KV). batch=1 long-context decode
+    additionally spreads the sequence over the data axes.
+    """
+    b_ax = batch_axes_for(mesh, batch)
+    m = mesh.shape.get("model", 1)
+    if kv_heads % m == 0 and kv_heads >= m:
+        kv_ax, seq_ax = "model", None
+    else:
+        kv_ax, seq_ax = None, "model"
+    if b_ax is None:  # batch=1: shard sequence over data too
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        seq_ax = data_axes + ("model",) if seq_ax == "model" else data_axes
+        if isinstance(seq_ax, tuple) and len(seq_ax) == 1:
+            seq_ax = seq_ax[0]
+    return P(None, b_ax, seq_ax, kv_ax, None)
+
+
+def ssm_cache_specs(mesh: Mesh, batch: int, n_heads: int) -> Dict[str, P]:
+    """Specs for {"conv": [layers,B,K-1,C], "h": [layers,B,H,P,N]}."""
+    b_ax = batch_axes_for(mesh, batch)
+    m = mesh.shape.get("model", 1)
+    h_ax = "model" if n_heads % m == 0 else None
+    c_ax = "model" if h_ax is None else None  # conv channels follow d_inner
+    return {"conv": P(None, b_ax, None, "model"),
+            "h": P(None, b_ax, h_ax, None, None)}

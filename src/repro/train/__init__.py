@@ -1,0 +1,3 @@
+from repro.train.state import TrainState, init_train_state
+from repro.train.train_step import make_train_step, TrainHParams
+from repro.train.serve_step import make_prefill_step, make_decode_step

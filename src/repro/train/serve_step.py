@@ -1,0 +1,45 @@
+"""Serving steps: prefill (context ingest → cache) and decode (one token)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int,
+                      compute_dtype=jnp.bfloat16, q_chunk: int = 512):
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        return M.prefill(cfg, params, batch, cache_len,
+                         compute_dtype=compute_dtype, q_chunk=q_chunk)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    def decode_step(params, cache: Any, token: jax.Array, pos):
+        return M.decode_step(cfg, params, cache, token, pos,
+                             compute_dtype=compute_dtype)
+    return decode_step
+
+
+def greedy_generate(cfg: ArchConfig, params, batch, *, steps: int,
+                    cache_len: int, compute_dtype=jnp.bfloat16):
+    """Simple greedy loop used by examples/tests (jit-compatible)."""
+    logits, cache = M.prefill(cfg, params, batch, cache_len,
+                              compute_dtype=compute_dtype)
+    B = logits.shape[0]
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    start = batch["tokens"].shape[1]
+
+    def body(carry, i):
+        tok, cache = carry
+        logits, cache = M.decode_step(cfg, params, cache, tok, start + i,
+                                      compute_dtype=compute_dtype)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return (nxt, cache), nxt[:, 0]
+
+    (_, cache), toks = jax.lax.scan(body, (tok0, cache), jnp.arange(steps))
+    return jnp.concatenate([tok0, toks.T[:, :-1]], axis=1), cache

@@ -1,0 +1,23 @@
+"""Train state pytree: fp32 master params + AdamW state + step counter."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWState, adamw_init
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,111 @@
+"""The train step: bf16 compute, fp32 masters, remat, microbatch grad
+accumulation (compute/comm overlap: each microbatch's gradient contribution
+is produced while the next microbatch's forward is scheduled — XLA overlaps
+the FSDP all-gathers/reduce-scatters with compute across scan iterations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import model as M
+from repro.optim import adamw_update, clip_by_global_norm, cosine_schedule
+from repro.train.state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_accum: int = 1          # microbatches per step
+    remat: str = "full"          # none | dots | full
+    q_chunk: int = 512
+    compute_dtype: Any = jnp.bfloat16
+    unroll: bool = False         # python loops instead of lax.scan (dry-run
+                                 # cost variants: exact trip-count accounting)
+    # gather FSDP-sharded weights ONCE per step (bf16, model-only sharding)
+    # instead of per-layer per-microbatch: trades +weight-resident memory
+    # for grad_accum× fewer all-gathers (the §Perf internvl hillclimb)
+    gather_once: bool = False
+
+
+def make_train_step(cfg: ArchConfig, hp: TrainHParams):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss(params, mb):
+        if hp.gather_once:
+            from repro import sharding as shd
+            from repro.models.model import param_axes
+            mesh = shd.current_mesh()
+            if mesh is not None:
+                specs = shd.build_param_specs(
+                    mesh, param_axes(cfg), params, "serve")
+                params = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        p.astype(hp.compute_dtype),
+                        jax.sharding.NamedSharding(mesh, s)),
+                    params, specs,
+                    is_leaf=lambda x: hasattr(x, "shape"))
+        return M.loss_fn(cfg, params, mb, compute_dtype=hp.compute_dtype,
+                         remat=hp.remat, q_chunk=hp.q_chunk,
+                         unroll=hp.unroll)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if hp.grad_accum <= 1:
+            (l, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # split the global batch into microbatches along batch dim
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape((hp.grad_accum, b // hp.grad_accum)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(reshape, batch)
+
+            def accum(carry, mb):
+                (l, metrics), g = grad_fn(state.params, mb)
+                gsum = jax.tree.map(jnp.add, carry, g)
+                return gsum, (l, metrics)
+
+            # seed the accumulator with microbatch 0's gradients so the scan
+            # carry inherits the FSDP param sharding (a fresh jnp.zeros carry
+            # has no sharding and XLA keeps it replicated)
+            (l0, m0), g0 = grad_fn(state.params,
+                                   jax.tree.map(lambda x: x[0], mbs))
+            if hp.unroll:
+                gsum, l, metrics = g0, l0, m0
+                for i in range(1, hp.grad_accum):
+                    mb = jax.tree.map(lambda x: x[i], mbs)
+                    (li, mi), gi = grad_fn(state.params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, gi)
+                    l = l + li
+                    metrics = jax.tree.map(jnp.add, metrics, mi)
+                l = l / hp.grad_accum
+                metrics = jax.tree.map(lambda x: x / hp.grad_accum, metrics)
+            else:
+                rest = jax.tree.map(lambda x: x[1:], mbs)
+                gsum, (ls, ms) = jax.lax.scan(accum, g0, rest)
+                l = (jnp.sum(ls) + l0) / hp.grad_accum
+                metrics = jax.tree.map(lambda a, b: (jnp.sum(a) + b)
+                                       / hp.grad_accum, ms, m0)
+            grads = jax.tree.map(lambda g: g / hp.grad_accum, gsum)
+
+        grads, gnorm = clip_by_global_norm(grads, hp.clip_norm)
+        lr = cosine_schedule(state.step, hp.warmup_steps, hp.total_steps,
+                             hp.peak_lr)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr,
+                                   weight_decay=hp.weight_decay)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr, loss_total=l)
+        return new_state, metrics
+
+    return train_step

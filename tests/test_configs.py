@@ -1,0 +1,62 @@
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs, supports_shape
+
+EXPECTED_PARAMS = {  # advertised sizes, total params (tolerance: ±35%)
+    "smollm-135m": 135e6,
+    "qwen3-1.7b": 1.7e9,
+    "yi-6b": 6e9,
+    "qwen3-14b": 14e9,
+    "olmoe-1b-7b": 7e9,
+    "jamba-v0.1-52b": 52e9,
+    "internvl2-76b": 76e9,   # assigned cell is the LM backbone
+    "mamba2-1.3b": 1.3e9,
+    "whisper-medium": 769e6,
+}
+
+
+def test_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_param_counts_match_advertised(name):
+    cfg = get_arch(name)
+    counts = cfg.param_counts()
+    assert counts["active"] <= counts["total"]
+    if name in EXPECTED_PARAMS:
+        exp = EXPECTED_PARAMS[name]
+        assert 0.65 * exp < counts["total"] < 1.45 * exp, (
+            f"{name}: {counts['total']:.2e} vs advertised {exp:.2e}")
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_scan_groups_reconstruct_layers(name):
+    cfg = get_arch(name)
+    pattern, repeat = cfg.scan_groups()
+    assert len(pattern) * repeat == cfg.n_layers
+    assert pattern * repeat == cfg.layer_kinds()
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_padded_vocab(name):
+    cfg = get_arch(name)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab - cfg.vocab_size < 256
+
+
+def test_long_context_gating():
+    long = SHAPES["long_500k"]
+    ok = {a for a in list_archs() if supports_shape(get_arch(a), long)[0]}
+    assert ok == {"jamba-v0.1-52b", "mamba2-1.3b"}
+    for a in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(get_arch(a), SHAPES[s])[0]
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_reduced_configs_are_small(name):
+    cfg = get_arch(name).reduced()
+    assert cfg.param_counts()["total"] < 20e6
+    assert cfg.scan_groups()[0] == get_arch(name).scan_groups()[0]  # pattern kept

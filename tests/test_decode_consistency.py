@@ -1,0 +1,39 @@
+"""prefill(t[:S]) + decode(t[S]) must equal forward(t[:S+1])'s next-token
+logits. MoE archs run with unbounded capacity (capacity dropping is
+batch-dependent by construction — see models/moe.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.moe as MOE
+from repro.configs import get_arch, list_archs
+from repro.data import make_batch
+from repro.models import model as M
+
+S, B = 24, 2
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_decode_matches_forward(name, monkeypatch):
+    monkeypatch.setattr(MOE, "CAPACITY_FACTOR", 1000.0)
+    cfg = get_arch(name).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    bd = make_batch(cfg, S + 1, B, step=0)
+    tokens = jnp.asarray(bd["tokens"])
+    extras = {k: jnp.asarray(v) for k, v in bd.items()
+              if k in ("patches", "frames")}
+
+    logits_full, _ = M.forward(cfg, params, {"tokens": tokens, **extras},
+                               compute_dtype=jnp.float32)
+    pre = {"tokens": tokens[:, :S], **extras}
+    logits0, cache = M.prefill(cfg, params, pre, cache_len=S + 8,
+                               compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits0),
+                               np.asarray(logits_full[:, S - 1]),
+                               atol=2e-3, rtol=1e-3)
+    logits1, _ = M.decode_step(cfg, params, cache, tokens[:, S:S + 1], S,
+                               compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits1),
+                               np.asarray(logits_full[:, S]),
+                               atol=2e-3, rtol=1e-3)

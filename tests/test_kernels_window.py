@@ -1,0 +1,54 @@
+"""Window-aggregation kernel: sweep + hypothesis property vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.window_agg import (window_aggregate,
+                                      window_aggregate_reference)
+
+SWEEP = [
+    (600, 5, 180, 60, "max", jnp.float32),
+    (600, 5, 180, 60, "mean", jnp.float32),
+    (1024, 130, 256, 64, "sum", jnp.float32),
+    (777, 3, 120, 40, "min", jnp.float32),
+    (2000, 1, 500, 100, "mean", jnp.float32),
+    (512, 128, 128, 128, "max", jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("T,C,w,s,agg,dtype", SWEEP)
+def test_window_vs_ref(T, C, w, s, agg, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), (T, C)) * 10).astype(dtype)
+    out = window_aggregate(x, agg=agg, window=w, stride=s, interpret=True)
+    ref = window_aggregate_reference(x, agg=agg, window=w, stride=s)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 12), st.integers(1, 6),
+       st.sampled_from(["max", "min", "sum", "mean"]),
+       st.integers(0, 2**31 - 1))
+def test_window_property(m, n_windows, stride_u, agg, seed):
+    """For random (window = m·stride), the kernel equals the oracle."""
+    stride = stride_u * 17          # non-power-of-two strides
+    window = m * stride
+    T = window + (n_windows - 1) * stride
+    x = np.random.default_rng(seed).standard_normal((T, 3)).astype(np.float32)
+    out = window_aggregate(jnp.asarray(x), agg=agg, window=window,
+                           stride=stride, interpret=True)
+    ref = window_aggregate_reference(jnp.asarray(x), agg=agg, window=window,
+                                     stride=stride)
+    assert out.shape == (n_windows, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_window_rejects_nonmultiple():
+    x = jnp.zeros((100, 1))
+    with pytest.raises(ValueError):
+        window_aggregate(x, agg="max", window=50, stride=33, interpret=True)

@@ -1,0 +1,99 @@
+"""HLO collective parser + roofline arithmetic (the §Roofline substrate)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import hardware as hw
+from repro import roofline as RL
+from repro.configs import SHAPES, get_arch
+from repro.utils.hlo import parse_collectives
+
+SAMPLE_HLO = """
+HloModule test
+  %all-reduce.1 = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[32,512]{1,0} all-gather(bf16[16,512]{1,0} %p1), replica_groups=[2,2]<=[4], dimensions={0}
+  %rs.3 = f32[8,128]{1,0} reduce-scatter(f32[16,128]{1,0} %p2), replica_groups={{0,1}}, dimensions={0}
+  %cp = u32[64]{0} collective-permute(u32[64]{0} %p3), source_target_pairs={{0,1}}
+  ROOT %aa = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %a, f32[4,4]{1,0} %b), replica_groups={{0,1}}
+  %ar-start = f32[100]{0} all-reduce-start(f32[100]{0} %x), replica_groups={{0,1}}
+  %ar-done = f32[100]{0} all-reduce-done(f32[100]{0} %ar-start)
+"""
+
+
+def test_parser_counts_and_bytes():
+    st = parse_collectives(SAMPLE_HLO)
+    assert st.counts["all-reduce"] == 2          # .1 and -start (not -done)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["all-to-all"] == 1
+    # all-reduce.1: 2 * 16*1024*4 * 3/4
+    expected_ar1 = 2 * 16 * 1024 * 4 * 3 / 4
+    # -start: 2 * 100*4 * 1/2
+    expected_ar2 = 2 * 100 * 4 * 1 / 2
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(
+        expected_ar1 + expected_ar2)
+    # all-gather: result 32*512*2 bytes * (g-1)/g with iota groups [2,2]->g=2
+    assert st.bytes_by_kind["all-gather"] == pytest.approx(
+        32 * 512 * 2 * 0.5)
+    # all-to-all: tuple of two f32[4,4] = 128 bytes * 1/2
+    assert st.bytes_by_kind["all-to-all"] == pytest.approx(128 * 0.5)
+    assert st.bytes_by_kind["collective-permute"] == pytest.approx(64 * 4)
+
+
+def test_parser_on_real_compiled_module():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.utils.hlo import parse_collectives
+        mesh = jax.make_mesh((4,), ("m",), axis_types=(AxisType.Auto,))
+        def f(x, w):
+            y = jnp.einsum("bd,df->bf", x, w)
+            return jnp.einsum("bf,fd->bd", y, w.T)  # forces an all-reduce
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None)),
+                                     NamedSharding(mesh, P(None, "m")))).lower(
+            jax.ShapeDtypeStruct((8, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
+        st = parse_collectives(c.as_text())
+        assert sum(st.counts.values()) >= 1, st.counts
+        assert st.total_bytes > 0
+        print("PARSER_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "PARSER_OK" in r.stdout, r.stderr[-1500:]
+
+
+def test_roofline_terms_and_bottleneck():
+    cfg = get_arch("yi-6b")
+    shape = SHAPES["train_4k"]
+    rep = RL.analyze_costs(
+        flops=1e15, nbytes=1e12, coll_bytes=1e10, coll_counts={},
+        cfg=cfg, shape=shape, mesh_name="16x16", chips=256)
+    assert rep.t_compute == pytest.approx(1e15 / hw.PEAK_FLOPS_BF16)
+    assert rep.t_memory == pytest.approx(1e12 / hw.HBM_BW)
+    assert rep.t_collective == pytest.approx(1e10 / hw.ICI_LINK_BW)
+    assert rep.bottleneck == "compute"
+    assert rep.t_step == rep.t_compute
+    assert rep.t_step_serial > rep.t_step
+
+
+def test_model_flops_conventions():
+    cfg = get_arch("olmoe-1b-7b")  # MoE: active < total
+    counts = cfg.param_counts()
+    assert counts["active"] < 0.35 * counts["total"]
+    t = RL.model_flops(cfg, SHAPES["train_4k"])
+    p = RL.model_flops(cfg, SHAPES["prefill_32k"])
+    d = RL.model_flops(cfg, SHAPES["decode_32k"])
+    tokens_t = 256 * 4096
+    assert t == pytest.approx(6 * counts["active"] * tokens_t)
+    assert p == pytest.approx(2 * counts["active"] * 32 * 32768)
+    assert d == pytest.approx(2 * counts["active"] * 128)

@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests: training learns, serving is coherent,
+fault-tolerant training resumes exactly, the VoS scheduler plans real jobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data import ShardedLoader
+from repro.launch.train import train_loop
+from repro.models import model as M
+from repro.train import TrainHParams
+from repro.train.serve_step import greedy_generate
+
+
+def test_training_learns_markov_structure():
+    """Loss on the synthetic Markov stream must drop materially."""
+    _, losses = train_loop("smollm-135m", steps=120, batch=8, seq=64,
+                           log_every=10**9,
+                           hp=TrainHParams(peak_lr=3e-3, warmup_steps=10,
+                                           total_steps=120, grad_accum=1,
+                                           remat="none"))
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_training_with_restarts_matches_uninterrupted(tmp_path):
+    common = dict(steps=30, batch=4, seq=32, save_every=10, seed=7,
+                  log_every=10**9)
+    s1, l1 = train_loop("qwen3-1.7b", ckpt_dir=str(tmp_path / "a"),
+                        p_fail=0.0, **common)
+    s2, l2 = train_loop("qwen3-1.7b", ckpt_dir=str(tmp_path / "b"),
+                        p_fail=0.08, **common)
+    # final params identical: restart replays the same step-keyed batches
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_arch("mamba2-1.3b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32)[None].repeat(2, 0)}
+    t1, _ = greedy_generate(cfg, params, batch, steps=8, cache_len=48)
+    t2, _ = greedy_generate(cfg, params, batch, steps=8, cache_len=48)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert t1.shape == (2, 8)
+
+
+def test_scheduler_plans_and_jobs_run():
+    """Integration: VoS plan → real (reduced) training jobs execute."""
+    from repro.core.costmodel import CostModel
+    from repro.core.heuristics import HEURISTICS
+    from repro.core.simulator import Simulator
+    from repro.core.tasks import PAPER_REGIME, TaskType, WorkloadGenerator
+    cost = CostModel.analytic()
+    types = [TaskType("smollm-135m", "train_4k")]
+    gen = WorkloadGenerator(types, cost, seed=0, **PAPER_REGIME)
+    trace = gen.trace(4)
+    res = Simulator(HEURISTICS["VPTR"], cost).run(trace)
+    assert res.completed >= 3
+    ran = [t for t in res.tasks if t.start is not None][:1]
+    for t in ran:
+        _, losses = train_loop(t.ttype.arch, steps=3, batch=2, seq=32,
+                               log_every=10**9)
+        assert np.isfinite(losses[-1])

@@ -1,0 +1,58 @@
+"""Hypothesis property tests on the VoS value system (Fig. 3 / Eq. 1-2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.value import TaskValueSpec, ValueCurve, task_value, vos_total
+
+pos = st.floats(0.01, 1e6, allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def curves(draw):
+    v_min = draw(st.floats(0.0, 1.0))
+    v_max = draw(st.floats(v_min, v_min + 10.0))
+    soft = draw(pos)
+    hard = soft * draw(st.floats(1.0, 10.0))
+    shape = draw(st.sampled_from(["linear", "exponential"]))
+    return ValueCurve(v_max, v_min, soft, hard, shape)
+
+
+@settings(max_examples=200, deadline=None)
+@given(curves(), pos, pos)
+def test_curve_monotone_nonincreasing(c, x1, x2):
+    lo, hi = sorted((x1, x2))
+    assert c.value(lo) >= c.value(hi) - 1e-12
+
+
+@settings(max_examples=200, deadline=None)
+@given(curves(), pos)
+def test_curve_bounds_and_thresholds(c, x):
+    v = c.value(x)
+    assert 0.0 <= v <= c.v_max
+    if x <= c.th_soft:
+        assert v == c.v_max
+    if x > c.th_hard:
+        assert v == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(curves(), curves(), st.floats(0.1, 8), st.floats(0, 1), pos, pos)
+def test_task_value_zero_rule_and_bounds(pc, ec, gamma, w_p, lat, en):
+    spec = TaskValueSpec(gamma=gamma, w_p=w_p, w_e=1 - w_p,
+                         perf_curve=pc, energy_curve=ec)
+    v = task_value(spec, lat, en)
+    assert 0.0 <= v <= gamma * (w_p * pc.v_max + (1 - w_p) * ec.v_max) + 1e-9
+    # Eq. 1 zero rule: either component at zero kills the whole value
+    if pc.value(lat) == 0.0 or ec.value(en) == 0.0:
+        assert v == 0.0
+
+
+def test_vos_is_sum():
+    assert vos_total([1.0, 2.5, 0.0]) == 3.5
+
+
+def test_invalid_curve_rejected():
+    with pytest.raises(ValueError):
+        ValueCurve(1.0, 0.0, 10.0, 5.0)
+    with pytest.raises(ValueError):
+        ValueCurve(1.0, 2.0, 1.0, 5.0)

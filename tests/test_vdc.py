@@ -1,0 +1,52 @@
+"""Property tests on the VDC buddy allocator (composable submeshes)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.vdc import PodGrid
+
+
+def _no_overlap(grid):
+    cells = set()
+    for v in grid.used.values():
+        for x in range(v.tile.x, v.tile.x + v.tile.w):
+            for y in range(v.tile.y, v.tile.y + v.tile.h):
+                assert (x, y) not in cells
+                cells.add((x, y))
+    return cells
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+                min_size=1, max_size=30),
+       st.integers(0, 2**31 - 1))
+def test_alloc_free_invariants(sizes, seed):
+    import random
+    rng = random.Random(seed)
+    grid = PodGrid()
+    live = []
+    for s in sizes:
+        v = grid.compose(s, 1.0, task_id=0)
+        if v is not None:
+            live.append(v)
+            assert v.chips == s
+        cells = _no_overlap(grid)
+        assert len(cells) == grid.used_chips
+        assert grid.used_chips + grid.free_chips == 256
+        if live and rng.random() < 0.4:
+            grid.release(live.pop(rng.randrange(len(live))))
+    for v in live:
+        grid.release(v)
+    assert grid.free_chips == 256
+    # coalescing must restore a full-grid allocation
+    assert grid.compose(256, 1.0, 0) is not None
+
+
+def test_full_then_none():
+    grid = PodGrid()
+    assert grid.compose(256, 1.0, 0) is not None
+    assert grid.compose(4, 1.0, 1) is None
+
+
+def test_non_power_of_two_rejected():
+    with pytest.raises(ValueError):
+        PodGrid().compose(24, 1.0, 0)
