@@ -1,0 +1,199 @@
+"""Edge↔DC placement engine benchmark: all-edge vs. all-DC vs. searched
+placement across three workload scenarios, written to BENCH_placement.json.
+
+Scenarios:
+  light_windows    — small sliding windows, gateway-class edge, per-fire
+                     energy SLOs that punish composing a VDC for tiny
+                     aggregations (edge should win).
+  heavy_analytics  — a CNN-scoring service whose window FLOPs exceed the
+                     edge device by ~10×: it must offload, but its light
+                     siblings should stay on the edge (hybrid wins).
+  constrained_edge — a weak, RAM-starved edge where the all-edge plan is
+                     infeasible and the stream must move to the DC.
+
+The searched placement must achieve VoS >= both baselines on at least
+2 of 3 scenarios (it searches a superset of both, so with exhaustive
+search this holds by construction — the bench verifies it end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Sequence, Tuple
+
+from repro.pipeline import (Broker, NeubotFarm, Pipeline, ServiceConfig,
+                            StreamService, WindowSpec)
+from repro.placement import (CoSimConfig, CoSimulator, EdgeSpec, Evaluator,
+                             LinkSpec, PlacementPlan, ServiceProfile,
+                             ServiceSLO, search_placement)
+
+OUT_PATH = os.environ.get("BENCH_PLACEMENT_OUT", "BENCH_placement.json")
+
+
+def _svc(broker, name, queue, column, agg, width, slide, budget=4096):
+    return StreamService(ServiceConfig(
+        name=name, queue=queue, column=column, agg=agg,
+        window=WindowSpec("sliding", width_s=width, slide_s=slide),
+        buffer_budget=budget), broker)
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    build: Callable[[], Pipeline]
+    profiles: Dict[str, ServiceProfile]
+    cfg: CoSimConfig
+    chips_options: Sequence[int] = (4, 8)
+
+
+# ---------------------------------------------------------------------------
+def scenario_light_windows() -> Scenario:
+    """Tiny windows at modest rate: the edge absorbs everything; a VDC
+    burns ~1 kW for milliseconds per fire and loses on the energy curve."""
+    def build():
+        b = Broker()
+        pipe = Pipeline(b)
+        pipe.add_farm(NeubotFarm(b, n_things=8, rate_hz=2.0, seed=11))
+        agg = _svc(b, "agg", "neubotspeed", "download_speed", "max", 120, 60)
+        smooth = _svc(b, "smooth", "agg_out", "value", "mean", 300, 60)
+        pipe.add_service(agg).add_service(smooth)
+        pipe.connect(agg, "agg_out")
+        return pipe
+
+    slo = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
+                     soft_energy_j=1.0, hard_energy_j=60.0)
+    profiles = {"agg": ServiceProfile(slo, flops_per_record=2e3),
+                "smooth": ServiceProfile(slo, flops_per_record=2e3)}
+    return Scenario("light_windows", build, profiles,
+                    CoSimConfig(horizon_s=600.0))
+
+
+def scenario_heavy_analytics() -> Scenario:
+    """One CNN-scoring service needs ~10× the edge's FLOP/s: it has to be
+    offloaded onto a JIT-composed VDC, while the cheap filter/trend
+    services are better left on the edge (network + VDC energy)."""
+    def build():
+        b = Broker()
+        pipe = Pipeline(b)
+        pipe.add_farm(NeubotFarm(b, n_things=8, rate_hz=4.0, seed=23))
+        clean = _svc(b, "clean", "neubotspeed", "download_speed", "max",
+                     60, 30)
+        classify = _svc(b, "classify", "neubotspeed", "latency_ms", "mean",
+                        300, 60, budget=16384)
+        trend = _svc(b, "trend", "clean_out", "value", "mean", 300, 60)
+        pipe.add_service(clean).add_service(classify).add_service(trend)
+        pipe.connect(clean, "clean_out")
+        return pipe
+
+    light = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
+                       soft_energy_j=1.0, hard_energy_j=60.0)
+    heavy = ServiceSLO(soft_latency_s=5.0, hard_latency_s=15.0,
+                       soft_energy_j=80.0, hard_energy_j=400.0, gamma=2.0)
+    profiles = {
+        "clean": ServiceProfile(light, flops_per_record=2e3),
+        "trend": ServiceProfile(light, flops_per_record=2e3),
+        # ~10x over the 20 GFLOP/s edge at 9600-record windows: 96 s
+        "classify": ServiceProfile(heavy, flops_per_record=2e8,
+                                   bytes_per_record=16.0),
+    }
+    cfg = CoSimConfig(horizon_s=600.0,
+                      link=LinkSpec(uplink_bps=40e6, compression=0.5))
+    return Scenario("heavy_analytics", build, profiles, cfg,
+                    chips_options=(4, 8, 16))
+
+
+def scenario_constrained_edge() -> Scenario:
+    """A weak, RAM-starved gateway: hosting every service's buffer budget
+    exceeds device RAM (all-edge infeasible) and its record pump is slow
+    enough that windows blow their latency SLO on-device."""
+    def build():
+        b = Broker()
+        pipe = Pipeline(b)
+        pipe.add_farm(NeubotFarm(b, n_things=12, rate_hz=2.0, seed=37))
+        agg = _svc(b, "agg", "neubotspeed", "download_speed", "max",
+                   120, 60, budget=32768)
+        pctl = _svc(b, "pctl", "neubotspeed", "latency_ms", "mean",
+                    300, 60, budget=32768)
+        trend = _svc(b, "trend", "agg_out", "value", "mean", 600, 120,
+                     budget=16384)
+        pipe.add_service(agg).add_service(pctl).add_service(trend)
+        pipe.connect(agg, "agg_out")
+        return pipe
+
+    slo = ServiceSLO(soft_latency_s=3.0, hard_latency_s=12.0,
+                     soft_energy_j=40.0, hard_energy_j=400.0)
+    profiles = {n: ServiceProfile(slo, flops_per_record=5e3)
+                for n in ("agg", "pctl", "trend")}
+    edge = EdgeSpec(throughput_rps=800.0, flops_per_s=2e9,
+                    ram_bytes=4 * 2**20)
+    cfg = CoSimConfig(horizon_s=600.0, edge=edge,
+                      link=LinkSpec(uplink_bps=50e6, compression=0.5))
+    return Scenario("constrained_edge", build, profiles, cfg)
+
+
+SCENARIOS = (scenario_light_windows, scenario_heavy_analytics,
+             scenario_constrained_edge)
+
+
+# ---------------------------------------------------------------------------
+def run_scenario(sc: Scenario) -> Dict:
+    cosim = CoSimulator(sc.build, sc.profiles, sc.cfg)
+    names = list(cosim.topology)
+    t0 = time.perf_counter()
+    # one memoized evaluator: the search reuses the baseline co-sim runs
+    ev = Evaluator(cosim)
+    all_edge = ev(PlacementPlan.all_edge(names))
+    all_dc = ev(PlacementPlan.all_dc(names, chips=sc.chips_options[0]))
+    sr = search_placement(cosim, chips_options=sc.chips_options,
+                          dvfs_options=(1.0, 0.7), evaluator=ev)
+    dt = time.perf_counter() - t0
+    searched = sr.result
+    base_best = max(
+        [r.vos for r in (all_edge, all_dc) if r.feasible] or [float("-inf")])
+    return {
+        "all_edge": all_edge.summary(),
+        "all_dc": all_dc.summary(),
+        "searched": searched.summary(),
+        "search": {"method": sr.method, "evaluations": sr.evaluations,
+                   "plan": sr.plan.label},
+        "searched_beats_baselines": bool(searched.feasible
+                                         and searched.vos >= base_best),
+        "wall_s": round(dt, 2),
+    }
+
+
+def main(csv_rows) -> None:
+    print("\n== Edge↔DC placement: all-edge vs all-DC vs searched ==")
+    report: Dict = {"scenarios": {}}
+    wins = 0
+    for make in SCENARIOS:
+        sc = make()
+        res = run_scenario(sc)
+        report["scenarios"][sc.name] = res
+        wins += res["searched_beats_baselines"]
+
+        def _vos(d):
+            return "infeasible" if not d["feasible"] else f"{d['vos']:.2f}"
+        print(f"{sc.name:18s} all-edge={_vos(res['all_edge']):>10s} "
+              f"all-dc={_vos(res['all_dc']):>10s} "
+              f"searched={_vos(res['searched']):>10s}  "
+              f"[{res['search']['evaluations']} evals, "
+              f"{res['search']['method']}]")
+        print(f"{'':18s} plan: {res['search']['plan']}")
+        sv = res["searched"]
+        csv_rows.append((f"placement_{sc.name}_vos",
+                         0.0 if sv["vos"] is None else sv["vos"] * 1e3,
+                         res["search"]["plan"]))
+    report["acceptance"] = {"wins": wins, "of": len(report["scenarios"]),
+                            "pass": wins >= 2}
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    status = "PASS" if wins >= 2 else "FAIL"
+    print(f"searched >= both baselines on {wins}/{len(report['scenarios'])} "
+          f"scenarios -> {status}; wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main([])

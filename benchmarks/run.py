@@ -3,6 +3,7 @@
   Fig. 4  -> bench_value_heuristics   (VPTR vs Simple value gains)
   Fig. 5  -> bench_power_capping      (power caps, sim vs emulation)
   §3 use case -> bench_pipeline       (Neubot queries, edge vs VDC offload)
+  placement -> bench_placement        (edge↔DC plans, BENCH_placement.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
   §Roofline -> bench_roofline         (dry-run derived terms per cell)
 
@@ -18,7 +19,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,pipeline,kernels,roofline")
+                    help="comma list: fig4,fig5,pipeline,placement,"
+                         "kernels,roofline")
     ap.add_argument("--no-emulation", action="store_true")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
@@ -35,12 +37,14 @@ def main() -> None:
             failures.append((tag, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (bench_kernels, bench_pipeline, bench_roofline,
-                            bench_value_heuristics, bench_power_capping)
+    from benchmarks import (bench_kernels, bench_pipeline, bench_placement,
+                            bench_roofline, bench_value_heuristics,
+                            bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
     run("fig5", bench_power_capping.main, csv_rows,
         emulate=not args.no_emulation)
     run("pipeline", bench_pipeline.main, csv_rows)
+    run("placement", bench_placement.main, csv_rows)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)
 

@@ -13,6 +13,15 @@ from typing import Dict, List, Optional, Tuple
 
 from repro import hardware as hw
 
+MIN_VDC_CHIPS = 4
+
+
+def is_valid_vdc_size(chips: int) -> bool:
+    """The single source of truth for composable VDC sizes: a power of
+    two of at least MIN_VDC_CHIPS (shared by PodGrid.compose and the
+    placement plan validation)."""
+    return chips >= MIN_VDC_CHIPS and not (chips & (chips - 1))
+
 
 @dataclasses.dataclass(frozen=True)
 class Tile:
@@ -78,8 +87,9 @@ class PodGrid:
     def compose(self, chips: int, dvfs_f: float, task_id: int
                 ) -> Optional[VDC]:
         """Compose a VDC of `chips` (power of two ≥4); None if fragmented."""
-        if chips & (chips - 1) or chips < 1:
-            raise ValueError("VDC sizes must be powers of two")
+        if not is_valid_vdc_size(chips):
+            raise ValueError(f"VDC sizes must be powers of two >= "
+                             f"{MIN_VDC_CHIPS}, got {chips}")
         candidates = sorted([t for t in self.free if t.chips >= chips],
                             key=lambda t: t.chips)
         if not candidates:

@@ -1,0 +1,25 @@
+"""Edge↔DC placement engine (JITA4DS bridge, arXiv:2108.02558 direction).
+
+Models edge devices and the edge↔DC network, expresses per-service
+placement plans over a pipeline DAG, co-simulates stream pipelines whose
+DC-placed services are offloaded onto just-in-time composed VDCs, and
+searches for SLO-optimal placements:
+
+  edge.py     EdgeNode — gateway-class device, serial fire execution
+  network.py  NetworkModel — uplink/downlink transfer time + energy
+  plan.py     PlacementPlan — per-service edge|dc + VDC chips/DVFS hints
+  cosim.py    CoSimulator — pipeline × JITA-4DS Simulator co-simulation
+  search.py   exhaustive / greedy+hill-climb VoS-optimal placement search
+"""
+from repro.placement.edge import EdgeNode, EdgeSpec, FireExec
+from repro.placement.network import LinkSpec, NetworkModel
+from repro.placement.plan import (PlacementPlan, ServicePlacement,
+                                  SITE_DC, SITE_EDGE, enumerate_plans,
+                                  service_options)
+from repro.placement.cosim import (CoSimConfig, CoSimResult, CoSimulator,
+                                   RecordLedger, ServiceLedger,
+                                   ServiceProfile, ServiceSLO,
+                                   analytics_cost_model)
+from repro.placement.search import (Evaluator, SearchResult,
+                                    exhaustive_search, greedy_search,
+                                    search_placement)

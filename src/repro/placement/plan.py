@@ -1,0 +1,147 @@
+"""Placement plans: per-service edge|dc assignment over a pipeline DAG.
+
+A plan maps every service of a pipeline topology to a site. DC-resident
+services additionally carry a VDC sizing hint (chip count, power of two
+≥ 4, matching ``PodGrid.compose``) and a DVFS frequency hint that the
+co-simulator forwards to the JITA-4DS scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterator, List, Mapping, Sequence, Tuple
+
+from repro.core.vdc import MIN_VDC_CHIPS, is_valid_vdc_size
+
+SITE_EDGE = "edge"
+SITE_DC = "dc"
+SITES = (SITE_EDGE, SITE_DC)
+
+Topology = Mapping[str, Sequence[str]]  # service -> upstream service names
+
+
+@dataclasses.dataclass(frozen=True)
+class ServicePlacement:
+    site: str
+    chips: int = 8          # VDC sizing hint (dc only)
+    dvfs_f: float = 1.0     # DVFS hint (dc only)
+
+    @property
+    def is_edge(self) -> bool:
+        return self.site == SITE_EDGE
+
+    @property
+    def label(self) -> str:
+        if self.is_edge:
+            return SITE_EDGE
+        return f"dc[{self.chips}]@{self.dvfs_f:g}"
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    assignments: Dict[str, ServicePlacement]
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def all_edge(cls, names: Sequence[str]) -> "PlacementPlan":
+        return cls({n: ServicePlacement(SITE_EDGE) for n in names})
+
+    @classmethod
+    def all_dc(cls, names: Sequence[str], chips: int = 8,
+               dvfs_f: float = 1.0) -> "PlacementPlan":
+        return cls({n: ServicePlacement(SITE_DC, chips, dvfs_f)
+                    for n in names})
+
+    # ------------------------------------------------------------- queries
+    def placement(self, name: str) -> ServicePlacement:
+        return self.assignments[name]
+
+    def site(self, name: str) -> str:
+        return self.assignments[name].site
+
+    def is_edge(self, name: str) -> bool:
+        return self.assignments[name].is_edge
+
+    def edge_services(self) -> List[str]:
+        return [n for n, p in self.assignments.items() if p.is_edge]
+
+    def dc_services(self) -> List[str]:
+        return [n for n, p in self.assignments.items() if not p.is_edge]
+
+    def cuts(self, topology: Topology) -> List[Tuple[str, str]]:
+        """DAG edges (upstream, downstream) whose endpoints sit on
+        different sites — each pays a network hop in the co-sim."""
+        out = []
+        for svc, ups in topology.items():
+            for u in ups:
+                if self.site(u) != self.site(svc):
+                    out.append((u, svc))
+        return out
+
+    def key(self) -> Tuple:
+        """Canonical hashable identity (for memoized search)."""
+        return tuple(sorted((n, p.site, p.chips if not p.is_edge else 0,
+                             p.dvfs_f if not p.is_edge else 0.0)
+                            for n, p in self.assignments.items()))
+
+    @property
+    def label(self) -> str:
+        return ",".join(f"{n}={p.label}"
+                        for n, p in sorted(self.assignments.items()))
+
+    # ---------------------------------------------------------- validation
+    def validate(self, topology: Topology, grid_chips: int = 256) -> None:
+        """Raise ValueError unless the plan covers exactly the topology's
+        services with well-formed placements."""
+        names = set(topology)
+        got = set(self.assignments)
+        if got != names:
+            missing, extra = names - got, got - names
+            raise ValueError(f"plan/topology mismatch: missing={sorted(missing)}"
+                             f" extra={sorted(extra)}")
+        for svc, ups in topology.items():
+            for u in ups:
+                if u not in names:
+                    raise ValueError(f"{svc!r} upstream {u!r} not in topology")
+        for n, p in self.assignments.items():
+            if p.site not in SITES:
+                raise ValueError(f"{n}: unknown site {p.site!r}")
+            if p.is_edge:
+                continue
+            if not is_valid_vdc_size(p.chips):
+                raise ValueError(f"{n}: VDC chips hint must be a power of "
+                                 f"two >= {MIN_VDC_CHIPS}, got {p.chips}")
+            if p.chips > grid_chips:
+                raise ValueError(f"{n}: chips hint {p.chips} exceeds the "
+                                 f"pod grid ({grid_chips})")
+            if not 0.0 < p.dvfs_f <= 1.0:
+                raise ValueError(f"{n}: dvfs_f must be in (0, 1], "
+                                 f"got {p.dvfs_f}")
+
+    # -------------------------------------------------------- enumeration
+    def with_placement(self, name: str, placement: ServicePlacement
+                       ) -> "PlacementPlan":
+        d = dict(self.assignments)
+        d[name] = placement
+        return PlacementPlan(d)
+
+
+def service_options(chips_options: Sequence[int] = (4, 8, 16),
+                    dvfs_options: Sequence[float] = (1.0,)
+                    ) -> List[ServicePlacement]:
+    """The per-service choice set a search explores."""
+    opts = [ServicePlacement(SITE_EDGE)]
+    for c in chips_options:
+        for f in dvfs_options:
+            opts.append(ServicePlacement(SITE_DC, c, f))
+    return opts
+
+
+def enumerate_plans(names: Sequence[str],
+                    chips_options: Sequence[int] = (4, 8, 16),
+                    dvfs_options: Sequence[float] = (1.0,)
+                    ) -> Iterator[PlacementPlan]:
+    """Exhaustive plan space: (1 + |chips|·|dvfs|)^n plans."""
+    opts = service_options(chips_options, dvfs_options)
+    for combo in itertools.product(opts, repeat=len(names)):
+        yield PlacementPlan(dict(zip(names, combo)))

@@ -1,0 +1,163 @@
+"""SLO-optimal placement search.
+
+Maximizes the Eq. 2 VoS reported by the co-simulator over per-service
+edge|dc assignments (plus the DC chips/DVFS hints), subject to the
+constraints the co-simulator enforces (edge RAM, DC power cap —
+infeasible plans score −inf).
+
+Small plan spaces are searched exhaustively; larger ones fall back to a
+greedy descent from the better of the all-edge / all-DC anchors,
+polished with seeded random-restart hill climbing. All evaluations are
+memoized on the plan's canonical key, and every step is deterministic
+for a fixed seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.placement.cosim import CoSimResult, CoSimulator
+from repro.placement.plan import (PlacementPlan, ServicePlacement,
+                                  enumerate_plans, service_options)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    plan: PlacementPlan
+    result: CoSimResult
+    method: str
+    evaluations: int
+    history: List[Tuple[str, float]]   # (plan label, vos) in eval order
+
+
+class Evaluator:
+    """Memoized plan evaluation; share one instance between baseline
+    runs and a search to avoid re-co-simulating identical plans."""
+
+    def __init__(self, cosim: CoSimulator):
+        self.cosim = cosim
+        self.cache: Dict[Tuple, CoSimResult] = {}
+        self.history: List[Tuple[str, float]] = []
+
+    def __call__(self, plan: PlacementPlan) -> CoSimResult:
+        key = plan.key()
+        if key not in self.cache:
+            res = self.cosim.run(plan)
+            self.cache[key] = res
+            self.history.append((plan.label, res.vos))
+        return self.cache[key]
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.cache)
+
+
+def _score(res: CoSimResult) -> float:
+    return res.vos if res.feasible else float("-inf")
+
+
+def exhaustive_search(cosim: CoSimulator,
+                      chips_options: Sequence[int] = (4, 8, 16),
+                      dvfs_options: Sequence[float] = (1.0,),
+                      evaluator: Optional[Evaluator] = None,
+                      ) -> SearchResult:
+    ev = evaluator or Evaluator(cosim)
+    names = list(cosim.topology)
+    best_plan: Optional[PlacementPlan] = None
+    best: Optional[CoSimResult] = None
+    for plan in enumerate_plans(names, chips_options, dvfs_options):
+        res = ev(plan)
+        if best is None or _score(res) > _score(best):
+            best_plan, best = plan, res
+    assert best_plan is not None and best is not None
+    return SearchResult(best_plan, best, "exhaustive", ev.evaluations,
+                        ev.history)
+
+
+def _greedy(ev: Evaluator, start: PlacementPlan,
+            options: List[ServicePlacement]) -> PlacementPlan:
+    """First-improvement single-service descent: sweep the services,
+    accept any improving move immediately, repeat until a full sweep
+    finds none (a local optimum of the single-flip neighborhood)."""
+    current, score = start, _score(ev(start))
+    improved = True
+    while improved:
+        improved = False
+        for name in sorted(current.assignments):
+            for opt in options:
+                if opt == current.assignments[name]:
+                    continue
+                cand = current.with_placement(name, opt)
+                s = _score(ev(cand))
+                if s > score:
+                    current, score = cand, s
+                    improved = True
+    return current
+
+
+def _hill_climb(ev: Evaluator, start: PlacementPlan,
+                options: List[ServicePlacement], rng: random.Random,
+                iters: int) -> PlacementPlan:
+    """Seeded stochastic single-flip climb (escapes plateau ties)."""
+    names = sorted(start.assignments)
+    current, score = start, _score(ev(start))
+    for _ in range(iters):
+        name = rng.choice(names)
+        opt = rng.choice(options)
+        if opt == current.assignments[name]:
+            continue
+        cand = current.with_placement(name, opt)
+        s = _score(ev(cand))
+        # accept improvements and sideways moves (plateau escape); cand
+        # always differs from current (identity options are skipped above)
+        if s >= score:
+            current, score = cand, s
+    return current
+
+
+def greedy_search(cosim: CoSimulator,
+                  chips_options: Sequence[int] = (4, 8, 16),
+                  dvfs_options: Sequence[float] = (1.0,),
+                  seed: int = 0, restarts: int = 2,
+                  climb_iters: int = 64,
+                  evaluator: Optional[Evaluator] = None) -> SearchResult:
+    ev = evaluator or Evaluator(cosim)
+    names = list(cosim.topology)
+    options = service_options(chips_options, dvfs_options)
+    rng = random.Random(seed)
+
+    anchors = [PlacementPlan.all_edge(names)]
+    for c in chips_options:
+        anchors.append(PlacementPlan.all_dc(names, chips=c,
+                                            dvfs_f=dvfs_options[0]))
+    for _ in range(restarts):
+        anchors.append(PlacementPlan(
+            {n: rng.choice(options) for n in names}))
+
+    best_plan: Optional[PlacementPlan] = None
+    for anchor in anchors:
+        local = _greedy(ev, anchor, options)
+        local = _hill_climb(ev, local, options, rng, climb_iters)
+        if best_plan is None or _score(ev(local)) > _score(ev(best_plan)):
+            best_plan = local
+    assert best_plan is not None
+    return SearchResult(best_plan, ev(best_plan), "greedy+hillclimb",
+                        ev.evaluations, ev.history)
+
+
+def search_placement(cosim: CoSimulator,
+                     chips_options: Sequence[int] = (4, 8, 16),
+                     dvfs_options: Sequence[float] = (1.0,),
+                     exhaustive_limit: int = 1024,
+                     seed: int = 0,
+                     evaluator: Optional[Evaluator] = None) -> SearchResult:
+    """Front door: exhaustive when the plan space fits under
+    `exhaustive_limit` evaluations, greedy + hill-climb otherwise."""
+    n_opts = 1 + len(chips_options) * len(dvfs_options)
+    space = n_opts ** len(cosim.topology)
+    if space <= exhaustive_limit:
+        return exhaustive_search(cosim, chips_options, dvfs_options,
+                                 evaluator=evaluator)
+    return greedy_search(cosim, chips_options, dvfs_options, seed=seed,
+                         evaluator=evaluator)

@@ -1,0 +1,216 @@
+"""Edge↔DC placement engine: plan validation, co-sim record conservation
+and determinism, search optimality vs the baseline plans, and the
+PodGrid.compose validation regression (power of two >= 4)."""
+import pytest
+
+from repro.core.vdc import PodGrid
+from repro.pipeline import (Broker, NeubotFarm, Pipeline, ServiceConfig,
+                            StreamService, WindowSpec)
+from repro.pipeline.store import TimeSeriesStore
+from repro.placement import (CoSimConfig, CoSimulator, EdgeSpec, LinkSpec,
+                             NetworkModel, PlacementPlan, ServicePlacement,
+                             ServiceProfile, ServiceSLO, search_placement)
+
+
+# --------------------------------------------------------------- fixtures
+def _build_pipeline(tight_buffers=False, with_store=False):
+    """Two-stage DAG: raw -> agg -> smooth, plus a parallel raw -> pctl."""
+    b = Broker()
+    pipe = Pipeline(b)
+    pipe.add_farm(NeubotFarm(b, n_things=4, rate_hz=2.0, seed=3))
+    budget = 64 if tight_buffers else 4096
+    store = TimeSeriesStore("spill", chunk_seconds=60.0) if with_store \
+        else None
+    agg = StreamService(ServiceConfig(
+        name="agg", queue="neubotspeed", column="download_speed", agg="max",
+        window=WindowSpec("sliding", 120.0, 30.0), buffer_budget=budget,
+        store=store), b)
+    pctl = StreamService(ServiceConfig(
+        name="pctl", queue="neubotspeed", column="latency_ms", agg="mean",
+        window=WindowSpec("sliding", 60.0, 30.0), buffer_budget=budget), b)
+    smooth = StreamService(ServiceConfig(
+        name="smooth", queue="agg_out", column="value", agg="mean",
+        window=WindowSpec("sliding", 120.0, 60.0)), b)
+    pipe.add_service(agg).add_service(pctl).add_service(smooth)
+    pipe.connect(agg, "agg_out")
+    return pipe
+
+
+def _cosim(horizon=300.0, tight_buffers=False, with_store=False, **slo_kw):
+    slo = ServiceSLO(soft_latency_s=slo_kw.pop("soft", 2.0),
+                     hard_latency_s=slo_kw.pop("hard", 10.0),
+                     soft_energy_j=2.0, hard_energy_j=100.0)
+    profiles = {n: ServiceProfile(slo, flops_per_record=2e3)
+                for n in ("agg", "pctl", "smooth")}
+    cfg = CoSimConfig(horizon_s=horizon)
+    return CoSimulator(
+        lambda: _build_pipeline(tight_buffers, with_store), profiles, cfg)
+
+
+NAMES = ["agg", "pctl", "smooth"]
+
+
+# ---------------------------------------------------------------- topology
+def test_pipeline_records_topology():
+    topo = _build_pipeline().topology()
+    assert topo == {"agg": [], "pctl": [], "smooth": ["agg"]}
+
+
+# -------------------------------------------------------------------- plan
+def test_plan_validation():
+    topo = {"a": [], "b": ["a"]}
+    PlacementPlan.all_edge(["a", "b"]).validate(topo)
+    PlacementPlan.all_dc(["a", "b"], chips=8).validate(topo)
+    with pytest.raises(ValueError):        # missing service
+        PlacementPlan.all_edge(["a"]).validate(topo)
+    with pytest.raises(ValueError):        # chips not a power of two >= 4
+        PlacementPlan({"a": ServicePlacement("dc", chips=2),
+                       "b": ServicePlacement("edge")}).validate(topo)
+    with pytest.raises(ValueError):        # unknown site
+        PlacementPlan({"a": ServicePlacement("cloud"),
+                       "b": ServicePlacement("edge")}).validate(topo)
+    with pytest.raises(ValueError):        # dvfs out of range
+        PlacementPlan({"a": ServicePlacement("dc", chips=8, dvfs_f=1.5),
+                       "b": ServicePlacement("edge")}).validate(topo)
+
+
+def test_plan_cuts():
+    topo = {"a": [], "b": ["a"], "c": ["b"]}
+    plan = PlacementPlan({"a": ServicePlacement("edge"),
+                          "b": ServicePlacement("dc"),
+                          "c": ServicePlacement("edge")})
+    assert sorted(plan.cuts(topo)) == [("a", "b"), ("b", "c")]
+
+
+# ----------------------------------------------------------- edge/network
+def test_network_accounting():
+    net = NetworkModel(LinkSpec(uplink_bps=10e6, rtt_s=0.1,
+                                record_bytes=100.0, compression=0.5))
+    t = net.uplink(1000)
+    assert t == pytest.approx(0.05 + 1000 * 100 * 0.5 / 10e6)
+    assert net.bytes_up == 50_000
+    assert net.energy_j > 0
+
+
+# ----------------------------------------------------- conservation property
+@pytest.mark.parametrize("plan_fn", [
+    lambda: PlacementPlan.all_edge(NAMES),
+    lambda: PlacementPlan.all_dc(NAMES, chips=4),
+    lambda: PlacementPlan({"agg": ServicePlacement("edge"),
+                           "pctl": ServicePlacement("dc", chips=4),
+                           "smooth": ServicePlacement("dc", chips=8)}),
+])
+def test_record_conservation(plan_fn):
+    """Every produced record is accounted for as edge-processed,
+    DC-processed, in-flight, or dropped — under eviction pressure (tiny
+    buffers, one service spilling to a store) and mixed placements."""
+    cs = _cosim(tight_buffers=True, with_store=True)
+    res = cs.run(plan_fn())
+    assert res.feasible
+    assert res.ledger.conserved()
+    for sl in res.ledger.services.values():
+        # the four categories partition production exactly
+        assert sl.produced == (sl.processed_edge + sl.processed_dc
+                               + sl.in_flight + sl.dropped)
+    # eviction pressure actually happened (the test is not vacuous)
+    tot = res.ledger.totals()
+    assert tot["evicted_stored"] + tot["evicted_lost"] > 0
+
+
+def test_conservation_with_dc_drops():
+    """An SLO no DC task can meet forces scheduler drops; the dropped
+    records must show up in the ledger, not vanish."""
+    slo = ServiceSLO(soft_latency_s=1e-5, hard_latency_s=2e-5,
+                     soft_energy_j=2.0, hard_energy_j=100.0)
+    profiles = {n: ServiceProfile(slo, flops_per_record=2e3)
+                for n in ("agg", "pctl", "smooth")}
+    cs = CoSimulator(lambda: _build_pipeline(), profiles,
+                     CoSimConfig(horizon_s=300.0))
+    res = cs.run(PlacementPlan.all_dc(NAMES, chips=4))
+    assert res.feasible
+    assert res.fires_dropped > 0
+    assert res.ledger.conserved()
+    assert res.ledger.totals()["dropped_dc"] > 0
+
+
+# ---------------------------------------------------------------- determinism
+def test_cosim_determinism():
+    """Same seed + same plan -> bit-identical VoS and accounting."""
+    plan = PlacementPlan({"agg": ServicePlacement("edge"),
+                          "pctl": ServicePlacement("dc", chips=4),
+                          "smooth": ServicePlacement("edge")})
+    r1 = _cosim().run(plan)
+    r2 = _cosim().run(plan)
+    assert r1.vos == r2.vos
+    assert r1.latency_p95 == r2.latency_p95
+    assert r1.energy_total_j == r2.energy_total_j
+    assert r1.ledger.totals() == r2.ledger.totals()
+
+
+# --------------------------------------------------------------------- search
+def test_search_no_worse_than_baselines():
+    cs = _cosim()
+    sr = search_placement(cs, chips_options=(4, 8))
+    all_edge = cs.run(PlacementPlan.all_edge(NAMES))
+    all_dc = cs.run(PlacementPlan.all_dc(NAMES, chips=4))
+    assert sr.result.feasible
+    assert sr.result.vos >= all_edge.vos
+    assert sr.result.vos >= all_dc.vos
+    assert sr.evaluations > 2
+
+
+def test_infeasible_edge_ram():
+    cs = _cosim()
+    cs.cfg.edge = EdgeSpec(ram_bytes=1024.0)   # nothing fits
+    res = cs.run(PlacementPlan.all_edge(NAMES))
+    assert not res.feasible and "RAM" in res.infeasible_reason
+    # but a fully offloaded plan is still fine
+    assert cs.run(PlacementPlan.all_dc(NAMES, chips=4)).feasible
+
+
+# ------------------------------------------------------------- cut semantics
+def test_dc_to_dc_handoff_ships_nothing():
+    """In a DC→DC chain only the edge→DC cut pays uplink bytes: the
+    downstream service consumes results that never left the DC."""
+    def build():
+        b = Broker()
+        pipe = Pipeline(b)
+        pipe.add_farm(NeubotFarm(b, n_things=4, rate_hz=2.0, seed=3))
+        agg = StreamService(ServiceConfig(
+            name="agg", queue="neubotspeed", column="download_speed",
+            agg="max", window=WindowSpec("sliding", 120.0, 30.0)), b)
+        smooth = StreamService(ServiceConfig(
+            name="smooth", queue="agg_out", column="value", agg="mean",
+            window=WindowSpec("sliding", 120.0, 60.0)), b)
+        pipe.add_service(agg).add_service(smooth)
+        pipe.connect(agg, "agg_out")
+        return pipe
+
+    slo = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
+                     soft_energy_j=2.0, hard_energy_j=100.0)
+    profiles = {n: ServiceProfile(slo, flops_per_record=2e3)
+                for n in ("agg", "smooth")}
+    cs = CoSimulator(build, profiles, CoSimConfig(horizon_s=300.0))
+    res = cs.run(PlacementPlan.all_dc(["agg", "smooth"], chips=4))
+    assert res.feasible and res.fires_completed == res.fires_total
+    sl = res.ledger.services["agg"]
+    spec = cs.cfg.link
+    # uplink carries exactly agg's source records, none of smooth's input
+    expected = sl.covered * spec.record_bytes * spec.compression
+    assert res.bytes_up == pytest.approx(expected)
+    # every completed DC fire surfaces its result edge-side exactly once
+    assert res.bytes_down == pytest.approx(
+        res.fires_completed * spec.result_bytes)
+
+
+# ------------------------------------------------- PodGrid.compose regression
+def test_compose_rejects_non_power_of_two_and_small():
+    """Docstring promises power-of-two >= 4; validation must agree."""
+    grid = PodGrid()
+    for bad in (0, 1, 2, 3, 5, 6, 24, 257):
+        with pytest.raises(ValueError):
+            grid.compose(bad, 1.0, 0)
+    vdc = grid.compose(4, 1.0, 0)
+    assert vdc is not None and vdc.chips == 4
+    grid.release(vdc)
+    assert grid.free_chips == grid.total_chips

@@ -1,5 +1,6 @@
 """Hypothesis property tests on the VoS value system (Fig. 3 / Eq. 1-2)."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.value import TaskValueSpec, ValueCurve, task_value, vos_total

@@ -1,5 +1,6 @@
 """Property tests on the VDC buddy allocator (composable submeshes)."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.vdc import PodGrid
