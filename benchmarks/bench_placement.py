@@ -29,7 +29,9 @@ from repro.placement import (CoSimConfig, CoSimulator, EdgeSpec, Evaluator,
                              LinkSpec, PlacementPlan, ServiceProfile,
                              ServiceSLO, search_placement)
 
-OUT_PATH = os.environ.get("BENCH_PLACEMENT_OUT", "BENCH_placement.json")
+def _out_path(smoke: bool) -> str:
+    default = "BENCH_placement_smoke.json" if smoke else "BENCH_placement.json"
+    return os.environ.get("BENCH_PLACEMENT_OUT", default)
 
 
 def _svc(broker, name, queue, column, agg, width, slide, budget=4096):
@@ -164,12 +166,14 @@ def run_scenario(sc: Scenario) -> Dict:
     }
 
 
-def main(csv_rows) -> None:
+def main(csv_rows, smoke: bool = False) -> None:
     print("\n== Edge↔DC placement: all-edge vs all-DC vs searched ==")
-    report: Dict = {"scenarios": {}}
+    report: Dict = {"scenarios": {}, "smoke": smoke}
     wins = 0
-    for make in SCENARIOS:
+    for make in (SCENARIOS[:1] if smoke else SCENARIOS):
         sc = make()
+        if smoke:
+            sc.cfg.horizon_s = 300.0    # reduced trace length
         res = run_scenario(sc)
         report["scenarios"][sc.name] = res
         wins += res["searched_beats_baselines"]
@@ -186,14 +190,17 @@ def main(csv_rows) -> None:
         csv_rows.append((f"placement_{sc.name}_vos",
                          0.0 if sv["vos"] is None else sv["vos"] * 1e3,
                          res["search"]["plan"]))
+    need = 1 if smoke else 2
     report["acceptance"] = {"wins": wins, "of": len(report["scenarios"]),
-                            "pass": wins >= 2}
-    with open(OUT_PATH, "w") as f:
+                            "pass": wins >= need}
+    out = _out_path(smoke)
+    with open(out, "w") as f:
         json.dump(report, f, indent=2)
-    status = "PASS" if wins >= 2 else "FAIL"
+    status = "PASS" if wins >= need else "FAIL"
     print(f"searched >= both baselines on {wins}/{len(report['scenarios'])} "
-          f"scenarios -> {status}; wrote {OUT_PATH}")
+          f"scenarios -> {status}; wrote {out}")
 
 
 if __name__ == "__main__":
-    main([])
+    import sys
+    main([], smoke="--smoke" in sys.argv)

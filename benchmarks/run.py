@@ -4,26 +4,41 @@
   Fig. 5  -> bench_power_capping      (power caps, sim vs emulation)
   §3 use case -> bench_pipeline       (Neubot queries, edge vs VDC offload)
   placement -> bench_placement        (edge↔DC plans, BENCH_placement.json)
+  online  -> bench_online             (fleet controller, BENCH_online.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
   §Roofline -> bench_roofline         (dry-run derived terms per cell)
+
+``--smoke`` is the CI fast path: the stream benches (placement, online)
+run 1 scenario each at reduced trace length, writing *_smoke.json so the
+committed full reports aren't clobbered. Keeps the benches from rotting
+without burning CI minutes.
 
 Prints ``name,us_per_call,derived`` CSV at the end.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` (script dir on sys.path, repo root not)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,pipeline,placement,"
+                    help="comma list: fig4,fig5,pipeline,placement,online,"
                          "kernels,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: 1 scenario per stream bench at "
+                         "reduced trace length")
     ap.add_argument("--no-emulation", action="store_true")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
+    if args.smoke and want is None:
+        want = {"placement", "online"}
 
     csv_rows: list = []
     failures = []
@@ -37,14 +52,15 @@ def main() -> None:
             failures.append((tag, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (bench_kernels, bench_pipeline, bench_placement,
-                            bench_roofline, bench_value_heuristics,
-                            bench_power_capping)
+    from benchmarks import (bench_kernels, bench_online, bench_pipeline,
+                            bench_placement, bench_roofline,
+                            bench_value_heuristics, bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
     run("fig5", bench_power_capping.main, csv_rows,
         emulate=not args.no_emulation)
     run("pipeline", bench_pipeline.main, csv_rows)
-    run("placement", bench_placement.main, csv_rows)
+    run("placement", bench_placement.main, csv_rows, smoke=args.smoke)
+    run("online", bench_online.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)
 

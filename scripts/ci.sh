@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# CI entry point: install the package with its test extra, then run the
-# tier-1 suite (see ROADMAP.md). Falls back to a PYTHONPATH run when the
-# environment is offline / externally managed.
+# CI entry point: install the package with its test extra, run the
+# tier-1 suite (see ROADMAP.md), then a fast benchmark smoke (1 scenario
+# per stream bench at reduced trace length) so the benches can't rot
+# silently. Falls back to a PYTHONPATH run when the environment is
+# offline / externally managed. Set CI_SKIP_BENCH_SMOKE=1 to run tests
+# only.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,3 +14,8 @@ if ! python -m pip install -q -e ".[test]" 2>"$PIP_LOG"; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
+    echo "== benchmark smoke (scripts/ci.sh; CI_SKIP_BENCH_SMOKE=1 to skip) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
+fi

@@ -10,7 +10,7 @@ overhead, using the same VoS calculus as admission.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Callable, List, Mapping, Optional, Tuple
 
 from repro.core.costmodel import CostModel
 from repro.core.tasks import Task
@@ -18,6 +18,12 @@ from repro.core.value import task_value
 from repro.core.vdc import PodGrid, VDC
 
 MIGRATION_OVERHEAD_S = 30.0  # checkpoint + re-shard + restart (modeled)
+
+# Relocating a *stream operator* between sites is far lighter than
+# re-sharding a training job: the operator's buffered window state is
+# shipped, then the operator warms back up (re-subscribes, rebuilds its
+# scheduler state) before it may fire again.
+SERVICE_WARMUP_S = 2.0
 
 
 @dataclasses.dataclass
@@ -58,3 +64,46 @@ def plan_regrow(running: List[Tuple[Task, VDC]], grid: PodGrid,
             if gain > 0 and (best is None or gain > best.gain):
                 best = Migration(task, vdc.chips, chips, gain)
     return best
+
+
+# ---------------------------------------------------------------------------
+# Service re-placement (online controller)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServiceMigration:
+    """One stream service relocating between sites under a new placement
+    plan: its buffered operator state ships over the network, then the
+    operator stalls for a warm-up before it may fire at the new site."""
+    service: str
+    src: str
+    dst: str
+    state_bytes: float
+    transfer_s: float
+    warmup_s: float = SERVICE_WARMUP_S
+
+    @property
+    def stall_s(self) -> float:
+        return self.transfer_s + self.warmup_s
+
+
+def plan_replacement(old: Mapping[str, object], new: Mapping[str, object],
+                     state_bytes_fn: Callable[[str], float],
+                     transfer_time_fn: Callable[[str, str, float], float],
+                     warmup_s: float = SERVICE_WARMUP_S
+                     ) -> List[ServiceMigration]:
+    """Diff two placement assignments (service -> placement with a
+    ``site`` attribute) into the migrations the switch requires. Only
+    site moves ship state; a DC service changing its VDC chips/DVFS hint
+    composes differently on its *next* fire for free (VDCs are built
+    just-in-time per task, there is nothing resident to move)."""
+    out: List[ServiceMigration] = []
+    for name in sorted(new):
+        np_, op = new[name], old.get(name)
+        if op is None or op.site == np_.site:
+            continue
+        sb = state_bytes_fn(name)
+        out.append(ServiceMigration(
+            service=name, src=op.site, dst=np_.site, state_bytes=sb,
+            transfer_s=transfer_time_fn(op.site, np_.site, sb),
+            warmup_s=warmup_s))
+    return out

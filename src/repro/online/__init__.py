@@ -1,0 +1,34 @@
+"""Online fleet controller: multi-edge-site topologies with drift-driven
+re-placement co-simulated through the DES loop.
+
+The static placement engine (``repro.placement``) scores one plan for
+one gateway. This subsystem makes re-assembly *online*, the way the
+JITA4DS framing describes it:
+
+  fleet.py       SiteSpec/FleetSpec/Fleet — several heterogeneous
+                 gateways, per-site links, one FIFO-contended shared
+                 uplink, site→site record routing
+  drift.py       deterministic workload drift — diurnal tides, Poisson
+                 bursts, site failure/recovery windows
+  controller.py  epoch-based re-placement (reuses placement.search over
+                 an analytic forecast), oracle + static baselines,
+                 migration hysteresis
+  des_bridge.py  FleetCoSimulator — incremental DC task submission into
+                 one persistent JITA-4DS Simulator (no optimistic
+                 handoff estimates), migration state shipped via the
+                 elastic cost model, per-service *and* per-site record
+                 conservation
+"""
+from repro.online.fleet import (ContendedUplink, EdgeSite, Fleet, FleetSpec,
+                                SiteSpec)
+from repro.online.drift import (DriftScenario, DriftingFarm,
+                                DriftingProducer, constant, diurnal,
+                                piecewise_linear, poisson_bursts,
+                                step_bursts)
+from repro.online.des_bridge import (BridgeInfo, EpochObservation,
+                                     FleetCoSimulator, OnlineConfig,
+                                     OnlineResult, ServiceInfo)
+from repro.online.controller import (ForecastModel, ForecastResult,
+                                     OnlineController, OracleController,
+                                     StaticController,
+                                     plan_on_average_rates)

@@ -1,0 +1,353 @@
+"""Epoch-based re-placement controllers.
+
+At every epoch boundary the bridge asks a controller for the coming
+epoch's placement plan. The online controller re-runs the *same*
+``placement.search`` machinery the static engine uses — over a cheap
+deterministic forecast model parameterized by a sliding estimate of the
+observed record rates — then applies a switch margin so marginal wins
+don't churn migrations. The oracle variant plans from ground-truth
+next-epoch rates with free migrations: the per-epoch upper bound the
+acceptance criteria compare against.
+
+The forecast model is intentionally analytic (M/M/1-style queueing
+inflation on saturated devices and the shared uplink, roofline DC
+latency via the same cost cells the DES uses): it only needs to *rank*
+plans; fidelity comes from the fleet co-simulation that replays the
+chosen schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence
+
+from repro.core.value import task_value
+from repro.online.des_bridge import BridgeInfo, EpochObservation
+from repro.placement.edge import EdgeNode
+from repro.placement.plan import SITE_DC, PlacementPlan
+from repro.placement.search import search_placement
+
+_NEVER_S = 1e9          # latency that zeroes any value curve
+
+
+@dataclasses.dataclass
+class ForecastResult:
+    """Duck-typed stand-in for CoSimResult: exactly what the search
+    scorer reads."""
+    vos: float
+    feasible: bool
+    plan_label: str = ""
+    infeasible_reason: str = ""
+
+
+class ForecastModel:
+    """Analytic plan scorer over a rate estimate; plugs into
+    ``placement.search`` (it quacks like a CoSimulator: ``.topology`` +
+    ``.run(plan)``)."""
+
+    def __init__(self, info: BridgeInfo, rates: Mapping[str, float],
+                 down: Optional[Mapping[str, bool]] = None):
+        self.info = info
+        self.topology = info.topology
+        self.rates = dict(rates)
+        self.down = dict(down or {})
+        self._nodes = {s.name: EdgeNode(s.edge) for s in info.fleet.sites}
+
+    # ------------------------------------------------------------- helpers
+    def _n_window(self, svc: str) -> float:
+        i = self.info.services[svc]
+        return min(self.rates.get(svc, 0.0) * i.width_s,
+                   float(i.buffer_budget))
+
+    def _n_new(self, svc: str) -> float:
+        i = self.info.services[svc]
+        return self.rates.get(svc, 0.0) * i.slide_s
+
+    def _dc_steps(self, svc: str) -> int:
+        return max(1, int(self._n_window(svc)
+                          // self.info.records_per_step) + 1)
+
+    # ----------------------------------------------------------------- run
+    def run(self, plan: PlacementPlan) -> ForecastResult:
+        info = self.info
+        order = list(self.topology)
+        sites = info.fleet.site_names
+        try:
+            plan.validate(self.topology, grid_chips=info.grid_chips,
+                          sites=tuple(sites) + (SITE_DC,))
+        except ValueError as e:
+            return ForecastResult(float("-inf"), False, plan.label, str(e))
+
+        # hard feasibility: down sites host nothing; RAM fits
+        for name in sites:
+            placed = [s for s in order if plan.site(s) == name]
+            if not placed:
+                continue
+            if self.down.get(name):
+                return ForecastResult(float("-inf"), False, plan.label,
+                                      f"site {name} is down")
+            spec = info.fleet.site(name).edge
+            budget = sum(info.services[s].buffer_budget for s in placed)
+            if spec.ram_required(budget) > spec.ram_bytes:
+                return ForecastResult(float("-inf"), False, plan.label,
+                                      f"site {name}: RAM")
+
+        # device utilization per site; shared-uplink serialization load
+        util: Dict[str, float] = {}
+        for name in sites:
+            node = self._nodes[name]
+            u = 0.0
+            for s in order:
+                if plan.site(s) != name:
+                    continue
+                i = info.services[s]
+                u += node.fire_time(int(self._n_window(s)),
+                                    info.profiles[s].flops_per_record) \
+                    / i.slide_s
+            util[name] = u
+        up_load = 0.0
+        for s in order:
+            i = info.services[s]
+            src = self._origin_site(s, plan)
+            dst = plan.site(s)
+            if src == dst or src == SITE_DC:
+                continue
+            net = info.fleet.site(src).link
+            wire = self._n_new(s) * net.record_bytes * net.compression
+            up_load += wire / net.uplink_bps / i.slide_s
+
+        def q_factor(u: float) -> float:
+            """Deterministic slide-aligned arrivals: a work-conserving
+            server is stable (no queue growth) below saturation, then
+            the backlog diverges. Mild inflation approaching 1, cliff
+            at it."""
+            if u >= 0.95:
+                return _NEVER_S
+            if u <= 0.7:
+                return 1.0
+            return 1.0 + (u - 0.7) / (0.95 - u)
+
+        # DC composition pressure: duty-cycle chip demand vs the grid
+        demand = 0.0
+        for s in order:
+            p = plan.placement(s)
+            if p.is_edge:
+                continue
+            t_step = info.cost.time_per_step(f"svc:{s}", "window",
+                                             p.chips, p.dvfs_f)
+            demand += p.chips * (self._dc_steps(s) * t_step
+                                 / info.services[s].slide_s)
+        dc_over = max(1.0, demand / info.grid_chips)
+
+        # Serial-device rank blocking: services co-located on one site
+        # fire at aligned slide boundaries and execute in topo-rank
+        # order, so a light service queued behind a long fire eats the
+        # long fire's latency — deterministically, not stochastically.
+        rank = {s: i for i, s in enumerate(order)}
+        fire_s: Dict[str, float] = {}
+        for s in order:
+            p = plan.placement(s)
+            if p.is_edge:
+                fire_s[s] = self._nodes[p.site].fire_time(
+                    int(self._n_window(s)),
+                    self.info.profiles[s].flops_per_record)
+
+        def rank_wait(s: str) -> float:
+            p = plan.placement(s)
+            slide = info.services[s].slide_s
+            w = 0.0
+            for o in order:
+                if o == s or plan.site(o) != p.site or rank[o] > rank[s]:
+                    continue
+                # collision probability of o's fires with s's boundaries
+                align = min(1.0, slide / info.services[o].slide_s)
+                w += align * fire_s[o]
+            return w
+
+        vos = 0.0
+        user = info.fleet.result_site
+        for s in order:
+            i = info.services[s]
+            prof = info.profiles[s]
+            p = plan.placement(s)
+            n_win, n_new = self._n_window(s), self._n_new(s)
+            hop = self._upstream_hop_s(s, plan)
+            if p.is_edge:
+                node = self._nodes[p.site]
+                base = fire_s[s]
+                lat = (base + rank_wait(s)) * q_factor(util[p.site]) + hop
+                lat += self._haul_s(s, plan, n_new, q_factor(up_load))
+                # mirror EdgeNode.execute_fire: the ingest term covers
+                # the whole window, not just the newly covered records
+                energy = (n_win * node.spec.energy_per_record_j
+                          + base * node.spec.active_power_w)
+            else:
+                src = self._origin_site(s, plan)
+                xfer = 0.0
+                if src != SITE_DC:
+                    net = info.fleet.site(src).link
+                    wire = n_new * net.record_bytes * net.compression
+                    xfer = (net.rtt_s / 2
+                            + wire / net.uplink_bps * q_factor(up_load))
+                t_step = info.cost.time_per_step(f"svc:{s}", "window",
+                                                 p.chips, p.dvfs_f)
+                dl = info.fleet.site(user).link.rtt_s / 2
+                lat = (hop + xfer + self._dc_steps(s) * t_step * dc_over
+                       + dl)
+                energy = self._dc_steps(s) * info.cost.energy_per_step(
+                    f"svc:{s}", "window", p.chips, p.dvfs_f)
+            v = task_value(prof.slo.value_spec(), lat, energy)
+            vos += v * (info.epoch_s / i.slide_s)
+        return ForecastResult(vos, True, plan.label)
+
+    def _origin_site(self, svc: str, plan: PlacementPlan) -> str:
+        """Dominant input-record origin: upstream's site if any upstream
+        exists, else the farm site of the input queue."""
+        ups = self.topology[svc]
+        if ups:
+            return plan.site(ups[0])
+        return self.info.fleet.farm_site(self.info.services[svc].queue)
+
+    def _upstream_hop_s(self, svc: str, plan: PlacementPlan) -> float:
+        """Result-handoff latency from upstream cuts."""
+        t = 0.0
+        my = plan.site(svc)
+        for u in self.topology[svc]:
+            us = plan.site(u)
+            if us == my or my == SITE_DC:
+                continue
+            if us == SITE_DC:
+                t = max(t, self.info.fleet.site(my).link.rtt_s / 2)
+            else:
+                t = max(t, self.info.fleet.site(us).link.rtt_s / 2
+                        + self.info.fleet.site(my).link.rtt_s / 2)
+        return t
+
+    def _haul_s(self, svc: str, plan: PlacementPlan, n_new: float,
+                up_factor: float) -> float:
+        """Cross-site raw-record haul onto an edge placement."""
+        src, dst = self._origin_site(svc, plan), plan.site(svc)
+        if src == dst or src == SITE_DC:
+            return 0.0
+        snet = self.info.fleet.site(src).link
+        dnet = self.info.fleet.site(dst).link
+        wire = n_new * snet.record_bytes * snet.compression
+        return (snet.rtt_s / 2 + wire / snet.uplink_bps * up_factor
+                + dnet.rtt_s / 2
+                + n_new * dnet.record_bytes / dnet.downlink_bps)
+
+
+# ---------------------------------------------------------------------------
+# Controllers
+# ---------------------------------------------------------------------------
+class StaticController:
+    """Plays one fixed plan for the whole horizon (the PR-1 world)."""
+    charge_migrations = True
+
+    def __init__(self, plan: PlacementPlan, label: str = "static"):
+        self.plan = plan
+        self.label = label
+
+    def bind(self, info: BridgeInfo) -> None:
+        self.info = info
+
+    def decide(self, obs: EpochObservation) -> PlacementPlan:
+        return self.plan
+
+
+class OnlineController:
+    """Sliding-estimate re-placement: search the plan space against the
+    forecast model each epoch; switch (and pay migrations) only when the
+    forecast win clears ``switch_margin``, or the live plan went
+    infeasible (site failure / RAM)."""
+    charge_migrations = True
+    label = "online"
+
+    def __init__(self, chips_options: Sequence[int] = (4, 8),
+                 dvfs_options: Sequence[float] = (1.0,),
+                 window: int = 3, switch_margin: float = 0.05,
+                 seed: int = 0,
+                 prior_rates: Optional[Mapping[str, float]] = None):
+        self.chips_options = tuple(chips_options)
+        self.dvfs_options = tuple(dvfs_options)
+        self.window = window
+        self.switch_margin = switch_margin
+        self.seed = seed
+        self.prior_rates = dict(prior_rates) if prior_rates else None
+        self.current: Optional[PlacementPlan] = None
+
+    def bind(self, info: BridgeInfo) -> None:
+        self.info = info
+
+    # ------------------------------------------------------------ estimate
+    def _estimate(self, obs: EpochObservation) -> Dict[str, float]:
+        win = obs.rates_window[-self.window:]
+        if not win:
+            if self.prior_rates is not None:
+                return dict(self.prior_rates)
+            return {s: 1.0 for s in self.info.topology}
+        out: Dict[str, float] = {}
+        for s in self.info.topology:
+            out[s] = sum(w.get(s, 0.0) for w in win) / len(win)
+        return out
+
+    def _rates(self, obs: EpochObservation) -> Dict[str, float]:
+        return self._estimate(obs)
+
+    def _down(self, obs: EpochObservation) -> Dict[str, bool]:
+        return obs.down_now
+
+    # -------------------------------------------------------------- decide
+    def decide(self, obs: EpochObservation) -> PlacementPlan:
+        rates, down = self._rates(obs), self._down(obs)
+        model = ForecastModel(self.info, rates, down)
+        up_sites = tuple(s for s in self.info.fleet.site_names
+                         if not down.get(s))
+        edge_sites = up_sites or self.info.fleet.site_names
+        sr = search_placement(model, self.chips_options, self.dvfs_options,
+                              seed=self.seed, edge_sites=edge_sites)
+        best = sr.plan
+        if self.current is None:
+            self.current = best
+            return best
+        cur = model.run(self.current)
+        new = model.run(best)
+        must_switch = not cur.feasible
+        margin_ok = (new.feasible and cur.feasible
+                     and new.vos > cur.vos * (1.0 + self.switch_margin)
+                     + 1e-9)
+        if must_switch or margin_ok:
+            self.current = best
+        return self.current
+
+
+class OracleController(OnlineController):
+    """Clairvoyant per-epoch baseline: plans from ground-truth coming-
+    epoch rates and outage windows, switches freely, pays no migration —
+    the upper bound the online controller is measured against."""
+    charge_migrations = False
+    label = "oracle"
+
+    def __init__(self, chips_options: Sequence[int] = (4, 8),
+                 dvfs_options: Sequence[float] = (1.0,), seed: int = 0):
+        super().__init__(chips_options=chips_options,
+                         dvfs_options=dvfs_options, window=1,
+                         switch_margin=0.0, seed=seed)
+
+    def _rates(self, obs: EpochObservation) -> Dict[str, float]:
+        return dict(obs.rates_oracle)
+
+    def _down(self, obs: EpochObservation) -> Dict[str, bool]:
+        return dict(obs.down_oracle)
+
+
+def plan_on_average_rates(info: BridgeInfo,
+                          avg_rates: Mapping[str, float],
+                          chips_options: Sequence[int] = (4, 8),
+                          dvfs_options: Sequence[float] = (1.0,),
+                          seed: int = 0) -> PlacementPlan:
+    """The best *static* plan the forecast model can find for the
+    whole-horizon average rates — the strongest honest static baseline."""
+    model = ForecastModel(info, avg_rates, down=None)
+    sr = search_placement(model, chips_options, dvfs_options, seed=seed,
+                          edge_sites=info.fleet.site_names)
+    return sr.plan

@@ -1,0 +1,261 @@
+"""Multi-edge-site fleet topology (online controller subsystem).
+
+The paper's deployment has *one* gateway next to the IoT farm; a fleet
+has several — heterogeneous gateway-class boxes, each with its own
+last-mile :class:`~repro.placement.network.LinkSpec` toward the DC, all
+sharing one contended WAN uplink: concurrent uplink transfers (record
+hauls, DC offloads, migration state) serialize FIFO through the shared
+pipe, so one site's burst delays every site's offloads.
+
+Routing between placement sites:
+
+  edge→DC    src site's uplink through the shared FIFO, half-RTT after
+             serialization completes.
+  DC→edge    dst site's downlink (uncontended direction).
+  edge→edge  relayed through the backhaul: src uplink (FIFO) then the
+             dst site's downlink — a pipeline cut spanning two gateways
+             pays both legs.
+
+Sites can fail and recover (drift scenarios): while a site is down its
+device executes nothing — fires queue until recovery (the outage windows
+push the device's busy horizon), and the controller is expected to move
+services off the site at the next epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.placement.edge import EdgeNode, EdgeSpec, FireExec
+from repro.placement.network import LinkSpec, NetworkModel
+from repro.placement.plan import SITE_DC
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """One edge gateway site: device + last-mile link + the producer
+    queues whose farms are physically attached to it."""
+    name: str
+    edge: EdgeSpec
+    link: LinkSpec = dataclasses.field(default_factory=LinkSpec)
+    farm_queues: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """The static fleet topology. ``user_site`` is where DC results
+    surface for the user (one downlink per completed DC fire, as in the
+    single-site co-sim); defaults to the first site."""
+    sites: Tuple[SiteSpec, ...]
+    user_site: str = ""
+
+    def __post_init__(self):
+        names = [s.name for s in self.sites]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate site names: {names}")
+        if SITE_DC in names:
+            raise ValueError(f"{SITE_DC!r} is reserved for the data center")
+        if not self.sites:
+            raise ValueError("a fleet needs at least one edge site")
+        queues: Dict[str, str] = {}
+        for s in self.sites:
+            for q in s.farm_queues:
+                if q in queues:
+                    raise ValueError(
+                        f"farm queue {q!r} pinned to both {queues[q]!r} "
+                        f"and {s.name!r}")
+                queues[q] = s.name
+        if self.user_site and self.user_site not in names:
+            raise ValueError(f"user_site {self.user_site!r} not in {names}")
+
+    @property
+    def site_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.sites)
+
+    def site(self, name: str) -> SiteSpec:
+        for s in self.sites:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def farm_site(self, queue: str) -> str:
+        """Site whose farm publishes into ``queue``; unpinned queues
+        default to the first site (the classic single-gateway reading)."""
+        for s in self.sites:
+            if queue in s.farm_queues:
+                return s.name
+        return self.sites[0].name
+
+    @property
+    def result_site(self) -> str:
+        return self.user_site or self.sites[0].name
+
+
+class ContendedUplink:
+    """FIFO serialization of the shared WAN uplink: a transfer occupies
+    the pipe for its serialization time; concurrent transfers queue in
+    admission order. Propagation (half-RTT) overlaps and does not hold
+    the pipe."""
+
+    def __init__(self):
+        self.busy_until = 0.0
+        self.queue_wait_s = 0.0     # total time transfers sat in the FIFO
+        self.transfers = 0
+
+    def admit(self, ready_ts: float, serialization_s: float) -> float:
+        """Returns the time the transfer starts serializing."""
+        start = max(ready_ts, self.busy_until)
+        self.queue_wait_s += start - ready_ts
+        self.busy_until = start + serialization_s
+        self.transfers += 1
+        return start
+
+
+class EdgeSite:
+    """Live state of one gateway: serial device + link accounting +
+    failure windows."""
+
+    def __init__(self, spec: SiteSpec,
+                 outages: Sequence[Tuple[float, float]] = ()):
+        self.spec = spec
+        self.node = EdgeNode(spec.edge)
+        self.net = NetworkModel(spec.link)
+        self.outages = sorted(outages)
+
+    def available_at(self, t: float) -> float:
+        """Earliest time >= t at which the device is not in an outage."""
+        for down, up in self.outages:
+            if down <= t < up:
+                return up
+        return t
+
+    def failed_at(self, t: float) -> bool:
+        return any(down <= t < up for down, up in self.outages)
+
+    def execute_fire(self, ready_ts: float, n_records: int,
+                     flops_per_record: float = 0.0) -> FireExec:
+        """Serial execution with outage deferral: a down site executes
+        nothing, so any fire whose execution would *overlap* an outage
+        window (including one that would start just before the site
+        fails) is deferred to recovery."""
+        dur = self.node.fire_time(n_records, flops_per_record)
+        start = max(ready_ts, self.node.busy_until)
+        moved = True
+        while moved:
+            moved = False
+            for down, up in self.outages:
+                if start < up and start + dur > down:
+                    start = max(up, self.node.busy_until)
+                    moved = True
+        if start > self.node.busy_until:
+            self.node.busy_until = start
+        return self.node.execute_fire(ready_ts, n_records, flops_per_record)
+
+
+class Fleet:
+    """Live multi-site topology: per-site devices and links plus the one
+    contended uplink every site's WAN transfers serialize through."""
+
+    def __init__(self, spec: FleetSpec,
+                 outages: Optional[Mapping[str, Sequence[Tuple[float, float]]]]
+                 = None):
+        self.spec = spec
+        outages = outages or {}
+        unknown = set(outages) - set(spec.site_names)
+        if unknown:
+            raise ValueError(f"outages for unknown sites: {sorted(unknown)}")
+        self.sites: Dict[str, EdgeSite] = {
+            s.name: EdgeSite(s, outages.get(s.name, ())) for s in spec.sites}
+        self.uplink = ContendedUplink()
+
+    def site(self, name: str) -> EdgeSite:
+        return self.sites[name]
+
+    # ------------------------------------------------------------- routing
+    def ship_records(self, src: str, dst: str, n_records: int,
+                     ready_ts: float) -> float:
+        """Route ``n_records`` raw records src→dst; returns their arrival
+        time. Same-site moves are free; any uplink leg contends FIFO."""
+        if n_records <= 0 or src == dst:
+            return ready_ts
+        t = ready_ts
+        if src != SITE_DC:
+            site = self.sites[src]
+            ser = site.net.uplink_serialization_s(n_records)
+            start = self.uplink.admit(t, ser)
+            site.net.uplink(n_records)          # bytes + NIC energy
+            t = start + ser + site.net.spec.rtt_s / 2
+        if dst != SITE_DC:
+            t += self.sites[dst].net.downlink_records(n_records)
+        return t
+
+    def ship_result(self, src: str, dst: str, ready_ts: float) -> float:
+        """Route one aggregate result src→dst (service handoff across a
+        cut). Results are single records: the uplink leg still pays FIFO
+        admission, the downlink leg is propagation-dominated."""
+        if src == dst:
+            return ready_ts
+        t = ready_ts
+        if src != SITE_DC:
+            site = self.sites[src]
+            ser = site.net.spec.result_bytes / site.net.spec.uplink_bps
+            start = self.uplink.admit(t, ser)
+            site.net.bytes_up += site.net.spec.result_bytes
+            site.net.energy_j += (site.net.spec.result_bytes
+                                  * site.net.spec.energy_per_byte_j)
+            t = start + ser + site.net.spec.rtt_s / 2
+        if dst != SITE_DC:
+            t += self.sites[dst].net.downlink(1)
+        return t
+
+    def ship_state(self, src: str, dst: str, state_bytes: float,
+                   ready_ts: float) -> float:
+        """Migration state transfer (operator buffer shipped under a new
+        placement plan). Occupies the shared uplink like any transfer —
+        a migration storm visibly delays record offloads."""
+        if state_bytes <= 0 or src == dst:
+            return ready_ts
+        t = ready_ts
+        if src != SITE_DC:
+            site = self.sites[src]
+            ser = state_bytes / site.net.spec.uplink_bps
+            start = self.uplink.admit(t, ser)
+            site.net.bytes_up += state_bytes
+            site.net.energy_j += state_bytes * site.net.spec.energy_per_byte_j
+            t = start + ser + site.net.spec.rtt_s / 2
+        if dst != SITE_DC:
+            site = self.sites[dst]
+            t += (site.net.spec.rtt_s / 2
+                  + state_bytes / site.net.spec.downlink_bps)
+            site.net.bytes_down += state_bytes
+            site.net.energy_j += state_bytes * site.net.spec.energy_per_byte_j
+        return t
+
+    def downlink_time(self, dst: str) -> float:
+        """Propagation+wire time of one result onto ``dst``'s downlink
+        (no accounting — used for SLO shifts)."""
+        return self.sites[dst].net.downlink_time(1)
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def edge_energy_j(self) -> float:
+        return sum(s.node.energy_j for s in self.sites.values())
+
+    @property
+    def network_energy_j(self) -> float:
+        return sum(s.net.energy_j for s in self.sites.values())
+
+    @property
+    def bytes_up(self) -> float:
+        return sum(s.net.bytes_up for s in self.sites.values())
+
+    @property
+    def bytes_down(self) -> float:
+        return sum(s.net.bytes_down for s in self.sites.values())
+
+    def per_site_energy(self) -> Dict[str, Dict[str, float]]:
+        return {name: {"edge_j": round(site.node.energy_j, 3),
+                       "network_j": round(site.net.energy_j, 3),
+                       "bytes_up": int(site.net.bytes_up),
+                       "bytes_down": int(site.net.bytes_down)}
+                for name, site in self.sites.items()}

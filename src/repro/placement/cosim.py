@@ -81,8 +81,12 @@ class ServiceSLO:
         """SLO as Eq. 1 parameters; `shift_s` moves the latency curve
         left by the delay already accumulated before DC execution starts,
         so a DC task's (finish − arrival) is scored on the *end-to-end*
-        deadline."""
-        soft = max(self.soft_latency_s - shift_s, _EPS)
+        deadline. The shifted soft threshold may go negative: a task
+        whose upstream+transfer delay already exceeded the soft deadline
+        starts *inside* the decay ramp (clamping it to ~0 would re-spread
+        the whole decay over the remaining budget and over-credit slow
+        offloads)."""
+        soft = self.soft_latency_s - shift_s
         hard = max(self.hard_latency_s - shift_s, soft)
         return TaskValueSpec(
             gamma=self.gamma, w_p=self.w_p, w_e=1.0 - self.w_p,

@@ -38,9 +38,16 @@ class NetworkModel:
         self.bytes_down = 0.0
         self.energy_j = 0.0
 
+    def uplink_wire_bytes(self, n_records: int) -> float:
+        return n_records * self.spec.record_bytes * self.spec.compression
+
+    def uplink_serialization_s(self, n_records: int) -> float:
+        """Time the uplink pipe is *occupied* by this transfer (excludes
+        propagation) — what a contended shared uplink serializes on."""
+        return self.uplink_wire_bytes(n_records) / self.spec.uplink_bps
+
     def uplink_time(self, n_records: int) -> float:
-        wire = n_records * self.spec.record_bytes * self.spec.compression
-        return self.spec.rtt_s / 2 + wire / self.spec.uplink_bps
+        return self.spec.rtt_s / 2 + self.uplink_serialization_s(n_records)
 
     def downlink_time(self, n_results: int = 1) -> float:
         wire = n_results * self.spec.result_bytes
@@ -60,3 +67,12 @@ class NetworkModel:
         self.bytes_down += wire
         self.energy_j += wire * self.spec.energy_per_byte_j
         return self.downlink_time(n_results)
+
+    def downlink_records(self, n_records: int) -> float:
+        """Raw records arriving over this site's downlink (site→site
+        routing relays through the backhaul: src uplink, then the dst
+        site's downlink). Record-sized wire, not aggregate-sized."""
+        wire = n_records * self.spec.record_bytes
+        self.bytes_down += wire
+        self.energy_j += wire * self.spec.energy_per_byte_j
+        return self.spec.rtt_s / 2 + wire / self.spec.downlink_bps

@@ -1,15 +1,18 @@
-"""Placement plans: per-service edge|dc assignment over a pipeline DAG.
+"""Placement plans: per-service site assignment over a pipeline DAG.
 
-A plan maps every service of a pipeline topology to a site. DC-resident
-services additionally carry a VDC sizing hint (chip count, power of two
-≥ 4, matching ``PodGrid.compose``) and a DVFS frequency hint that the
-co-simulator forwards to the JITA-4DS scheduler.
+A plan maps every service of a pipeline topology to a site: the DC
+(``SITE_DC``) or an edge gateway. Single-gateway deployments use the
+default ``SITE_EDGE`` name; multi-site fleets (``repro.online``) use
+one name per gateway — any site other than ``SITE_DC`` is edge-resident.
+DC-resident services additionally carry a VDC sizing hint (chip count,
+power of two ≥ 4, matching ``PodGrid.compose``) and a DVFS frequency
+hint that the co-simulator forwards to the JITA-4DS scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterator, List, Mapping, Sequence, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.vdc import MIN_VDC_CHIPS, is_valid_vdc_size
 
@@ -28,12 +31,12 @@ class ServicePlacement:
 
     @property
     def is_edge(self) -> bool:
-        return self.site == SITE_EDGE
+        return self.site != SITE_DC
 
     @property
     def label(self) -> str:
         if self.is_edge:
-            return SITE_EDGE
+            return self.site
         return f"dc[{self.chips}]@{self.dvfs_f:g}"
 
 
@@ -43,8 +46,9 @@ class PlacementPlan:
 
     # ------------------------------------------------------------ builders
     @classmethod
-    def all_edge(cls, names: Sequence[str]) -> "PlacementPlan":
-        return cls({n: ServicePlacement(SITE_EDGE) for n in names})
+    def all_edge(cls, names: Sequence[str],
+                 site: str = SITE_EDGE) -> "PlacementPlan":
+        return cls({n: ServicePlacement(site) for n in names})
 
     @classmethod
     def all_dc(cls, names: Sequence[str], chips: int = 8,
@@ -90,9 +94,12 @@ class PlacementPlan:
                         for n, p in sorted(self.assignments.items()))
 
     # ---------------------------------------------------------- validation
-    def validate(self, topology: Topology, grid_chips: int = 256) -> None:
+    def validate(self, topology: Topology, grid_chips: int = 256,
+                 sites: Optional[Sequence[str]] = None) -> None:
         """Raise ValueError unless the plan covers exactly the topology's
-        services with well-formed placements."""
+        services with well-formed placements. ``sites`` is the allowed
+        site universe (default: the classic single-gateway pair)."""
+        allowed = set(sites) if sites is not None else set(SITES)
         names = set(topology)
         got = set(self.assignments)
         if got != names:
@@ -104,8 +111,9 @@ class PlacementPlan:
                 if u not in names:
                     raise ValueError(f"{svc!r} upstream {u!r} not in topology")
         for n, p in self.assignments.items():
-            if p.site not in SITES:
-                raise ValueError(f"{n}: unknown site {p.site!r}")
+            if p.site not in allowed:
+                raise ValueError(f"{n}: unknown site {p.site!r} "
+                                 f"(allowed: {sorted(allowed)})")
             if p.is_edge:
                 continue
             if not is_valid_vdc_size(p.chips):
@@ -127,10 +135,12 @@ class PlacementPlan:
 
 
 def service_options(chips_options: Sequence[int] = (4, 8, 16),
-                    dvfs_options: Sequence[float] = (1.0,)
+                    dvfs_options: Sequence[float] = (1.0,),
+                    edge_sites: Sequence[str] = (SITE_EDGE,)
                     ) -> List[ServicePlacement]:
-    """The per-service choice set a search explores."""
-    opts = [ServicePlacement(SITE_EDGE)]
+    """The per-service choice set a search explores: one edge option per
+    gateway site plus the DC chips×DVFS grid."""
+    opts = [ServicePlacement(s) for s in edge_sites]
     for c in chips_options:
         for f in dvfs_options:
             opts.append(ServicePlacement(SITE_DC, c, f))
@@ -139,9 +149,10 @@ def service_options(chips_options: Sequence[int] = (4, 8, 16),
 
 def enumerate_plans(names: Sequence[str],
                     chips_options: Sequence[int] = (4, 8, 16),
-                    dvfs_options: Sequence[float] = (1.0,)
+                    dvfs_options: Sequence[float] = (1.0,),
+                    edge_sites: Sequence[str] = (SITE_EDGE,)
                     ) -> Iterator[PlacementPlan]:
-    """Exhaustive plan space: (1 + |chips|·|dvfs|)^n plans."""
-    opts = service_options(chips_options, dvfs_options)
+    """Exhaustive plan space: (|sites| + |chips|·|dvfs|)^n plans."""
+    opts = service_options(chips_options, dvfs_options, edge_sites)
     for combo in itertools.product(opts, repeat=len(names)):
         yield PlacementPlan(dict(zip(names, combo)))

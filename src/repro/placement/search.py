@@ -18,7 +18,7 @@ import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.placement.cosim import CoSimResult, CoSimulator
-from repro.placement.plan import (PlacementPlan, ServicePlacement,
+from repro.placement.plan import (PlacementPlan, ServicePlacement, SITE_EDGE,
                                   enumerate_plans, service_options)
 
 
@@ -61,12 +61,14 @@ def exhaustive_search(cosim: CoSimulator,
                       chips_options: Sequence[int] = (4, 8, 16),
                       dvfs_options: Sequence[float] = (1.0,),
                       evaluator: Optional[Evaluator] = None,
+                      edge_sites: Sequence[str] = (SITE_EDGE,),
                       ) -> SearchResult:
     ev = evaluator or Evaluator(cosim)
     names = list(cosim.topology)
     best_plan: Optional[PlacementPlan] = None
     best: Optional[CoSimResult] = None
-    for plan in enumerate_plans(names, chips_options, dvfs_options):
+    for plan in enumerate_plans(names, chips_options, dvfs_options,
+                                edge_sites):
         res = ev(plan)
         if best is None or _score(res) > _score(best):
             best_plan, best = plan, res
@@ -121,13 +123,14 @@ def greedy_search(cosim: CoSimulator,
                   dvfs_options: Sequence[float] = (1.0,),
                   seed: int = 0, restarts: int = 2,
                   climb_iters: int = 64,
-                  evaluator: Optional[Evaluator] = None) -> SearchResult:
+                  evaluator: Optional[Evaluator] = None,
+                  edge_sites: Sequence[str] = (SITE_EDGE,)) -> SearchResult:
     ev = evaluator or Evaluator(cosim)
     names = list(cosim.topology)
-    options = service_options(chips_options, dvfs_options)
+    options = service_options(chips_options, dvfs_options, edge_sites)
     rng = random.Random(seed)
 
-    anchors = [PlacementPlan.all_edge(names)]
+    anchors = [PlacementPlan.all_edge(names, site=s) for s in edge_sites]
     for c in chips_options:
         anchors.append(PlacementPlan.all_dc(names, chips=c,
                                             dvfs_f=dvfs_options[0]))
@@ -151,13 +154,17 @@ def search_placement(cosim: CoSimulator,
                      dvfs_options: Sequence[float] = (1.0,),
                      exhaustive_limit: int = 1024,
                      seed: int = 0,
-                     evaluator: Optional[Evaluator] = None) -> SearchResult:
+                     evaluator: Optional[Evaluator] = None,
+                     edge_sites: Sequence[str] = (SITE_EDGE,)) -> SearchResult:
     """Front door: exhaustive when the plan space fits under
-    `exhaustive_limit` evaluations, greedy + hill-climb otherwise."""
-    n_opts = 1 + len(chips_options) * len(dvfs_options)
+    `exhaustive_limit` evaluations, greedy + hill-climb otherwise.
+    ``edge_sites`` widens the per-service choice set to a multi-gateway
+    fleet; the evaluator must understand those site names (the online
+    controller's forecast model does)."""
+    n_opts = len(edge_sites) + len(chips_options) * len(dvfs_options)
     space = n_opts ** len(cosim.topology)
     if space <= exhaustive_limit:
         return exhaustive_search(cosim, chips_options, dvfs_options,
-                                 evaluator=evaluator)
+                                 evaluator=evaluator, edge_sites=edge_sites)
     return greedy_search(cosim, chips_options, dvfs_options, seed=seed,
-                         evaluator=evaluator)
+                         evaluator=evaluator, edge_sites=edge_sites)

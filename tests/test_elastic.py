@@ -1,0 +1,133 @@
+"""Elastic reallocation policies: plan_regrow (grow a running job onto a
+larger free tile when the recovered value beats the migration pause) and
+plan_replacement (diff two placement plans into service migrations)."""
+import pytest
+
+from repro.core.costmodel import CellCost, CostModel
+from repro.core.elastic import (MIGRATION_OVERHEAD_S, SERVICE_WARMUP_S,
+                                ServiceMigration, plan_regrow,
+                                plan_replacement)
+from repro.core.tasks import Task, TaskType
+from repro.core.value import TaskValueSpec, ValueCurve
+from repro.core.vdc import PodGrid
+
+
+# --------------------------------------------------------------- fixtures
+def _cost(t_compute=1.0):
+    # step_time(chips) = t_compute * 256/chips (compute-bound cell)
+    return CostModel({("a", "s"): CellCost(t_compute, 1e-3, 1e-3, 1e9)})
+
+
+def _spec(soft, hard):
+    curve = ValueCurve(1.0, 0.1, soft, hard)
+    return TaskValueSpec(gamma=1.0, w_p=0.7, w_e=0.3, perf_curve=curve,
+                         energy_curve=ValueCurve(1.0, 0.1, 1e12, 1e13))
+
+
+def _running_task(cost, chips=16, steps=10, soft=100.0, hard=300.0):
+    """A task mid-flight on a `chips` VDC, started at t=0."""
+    task = Task(tid=0, ttype=TaskType("a", "s", allowable_chips=(16, 64)),
+                steps=steps, arrival=0.0, value=_spec(soft, hard))
+    grid = PodGrid()                      # 256 chips: room to grow
+    vdc = grid.compose(chips, 1.0, task.tid)
+    t_step = cost.time_per_step("a", "s", chips, 1.0)
+    task.start, task.finish = 0.0, t_step * steps
+    task.chips = chips
+    return task, vdc, grid
+
+
+# ------------------------------------------------------------ plan_regrow
+def test_regrow_proposes_profitable_grow():
+    """16→64 chips cuts the remaining 10 steps from 16 s to 4 s each;
+    even after the 30 s migration pause the job finishes far earlier and
+    recovers latency value."""
+    cost = _cost()
+    task, vdc, grid = _running_task(cost, soft=100.0, hard=300.0)
+    mig = plan_regrow([(task, vdc)], grid, cost, now=10.0)
+    assert mig is not None
+    assert mig.old_chips == 16 and mig.new_chips == 64
+    assert mig.gain > 0
+    # the gain must equal the value delta its own cost math implies
+    t_old = cost.time_per_step("a", "s", 16, 1.0)
+    t_new = cost.time_per_step("a", "s", 64, 1.0)
+    done_frac = 10.0 / (task.finish - task.start)
+    steps_left = max(1, int(10 * (1 - done_frac)))
+    finish_old = 10.0 + steps_left * t_old
+    finish_new = 10.0 + MIGRATION_OVERHEAD_S + steps_left * t_new
+    assert finish_new < finish_old        # sanity: grow really is faster
+
+    def val(latency):
+        return task.value.gamma * (
+            0.7 * task.value.perf_curve.value(latency)
+            + 0.3 * task.value.energy_curve.value(task.energy_j))
+    assert mig.gain == pytest.approx(val(finish_new) - val(finish_old),
+                                     abs=1e-6)
+
+
+def test_regrow_none_without_free_chips():
+    """A fully occupied grid cannot host a larger tile."""
+    cost = _cost()
+    task = Task(tid=0, ttype=TaskType("a", "s", allowable_chips=(16, 64)),
+                steps=10, arrival=0.0, value=_spec(100.0, 300.0))
+    grid = PodGrid(4, 4)                  # 16 chips total, all taken
+    vdc = grid.compose(16, 1.0, task.tid)
+    t_step = cost.time_per_step("a", "s", 16, 1.0)
+    task.start, task.finish = 0.0, t_step * 10
+    assert grid.free_chips == 0
+    assert plan_regrow([(task, vdc)], grid, cost, now=10.0) is None
+
+
+def test_regrow_none_when_not_worth_the_pause():
+    """If the job already earns max value (soft threshold far away), the
+    30 s pause cannot recover anything — no migration."""
+    cost = _cost()
+    task, vdc, grid = _running_task(cost, soft=1e6, hard=2e6)
+    assert plan_regrow([(task, vdc)], grid, cost, now=10.0) is None
+
+
+def test_regrow_respects_allowable_chips():
+    """Chips outside the task's allowable set are never proposed."""
+    cost = _cost()
+    task, vdc, grid = _running_task(cost)
+    task.ttype = TaskType("a", "s", allowable_chips=(16,))  # nothing larger
+    assert plan_regrow([(task, vdc)], grid, cost, now=10.0) is None
+
+
+def test_regrow_picks_best_gain_among_tasks():
+    cost = _cost()
+    t1, v1, grid = _running_task(cost, soft=100.0, hard=300.0)
+    t2 = Task(tid=1, ttype=TaskType("a", "s", allowable_chips=(16, 64)),
+              steps=10, arrival=0.0, value=_spec(1e6, 2e6))  # already max
+    v2 = grid.compose(16, 1.0, t2.tid)
+    t_step = cost.time_per_step("a", "s", 16, 1.0)
+    t2.start, t2.finish = 0.0, t_step * 10
+    mig = plan_regrow([(t1, v1), (t2, v2)], grid, cost, now=10.0)
+    assert mig is not None and mig.task is t1
+
+
+# ------------------------------------------------------ plan_replacement
+class _P:
+    def __init__(self, site):
+        self.site = site
+
+
+def test_plan_replacement_diffs_site_moves_only():
+    old = {"a": _P("gw-1"), "b": _P("dc"), "c": _P("gw-1")}
+    new = {"a": _P("gw-2"), "b": _P("dc"), "c": _P("gw-1")}
+    migs = plan_replacement(old, new,
+                            state_bytes_fn=lambda s: 1000.0,
+                            transfer_time_fn=lambda src, dst, b: b / 500.0)
+    assert [m.service for m in migs] == ["a"]
+    m = migs[0]
+    assert (m.src, m.dst) == ("gw-1", "gw-2")
+    assert m.transfer_s == pytest.approx(2.0)
+    assert m.stall_s == pytest.approx(2.0 + SERVICE_WARMUP_S)
+
+
+def test_plan_replacement_new_service_and_no_moves():
+    old = {"a": _P("gw-1")}
+    new = {"a": _P("gw-1"), "b": _P("dc")}   # b has no old placement
+    migs = plan_replacement(old, new, lambda s: 1.0, lambda *a: 0.0)
+    assert migs == []
+    assert isinstance(ServiceMigration("x", "a", "b", 1.0, 0.5).stall_s,
+                      float)

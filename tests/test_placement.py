@@ -203,6 +203,86 @@ def test_dc_to_dc_handoff_ships_nothing():
         res.fires_completed * spec.result_bytes)
 
 
+# --------------------------------------------------- evaluator memoization
+def test_evaluator_memoizes_on_canonical_key():
+    """Identical plans under permuted service order (and permuted dict
+    insertion) are ONE cache entry — the search must never re-co-sim a
+    plan it has already scored."""
+    import itertools
+
+    from repro.placement import Evaluator
+
+    cs = _cosim(horizon=120.0)
+    ev = Evaluator(cs)
+    assignments = {"agg": ServicePlacement("edge"),
+                   "pctl": ServicePlacement("dc", chips=4),
+                   "smooth": ServicePlacement("dc", chips=8, dvfs_f=0.7)}
+    ref = ev(PlacementPlan(dict(assignments)))
+    for perm in itertools.permutations(assignments):
+        plan = PlacementPlan({n: assignments[n] for n in perm})
+        assert plan.key() == PlacementPlan(assignments).key()
+        res = ev(plan)
+        assert res is ref                 # cache hit, same object
+    assert ev.evaluations == 1
+    assert len(ev.history) == 1
+    # a genuinely different plan is a new entry
+    ev(PlacementPlan(dict(assignments, agg=ServicePlacement("dc", chips=4))))
+    assert ev.evaluations == 2
+
+
+def test_evaluator_key_distinguishes_hints():
+    """chips / DVFS hints are part of the identity (same sites, different
+    VDC sizing must re-evaluate)."""
+    a = PlacementPlan({"x": ServicePlacement("dc", chips=4)})
+    b = PlacementPlan({"x": ServicePlacement("dc", chips=8)})
+    c = PlacementPlan({"x": ServicePlacement("dc", chips=4, dvfs_f=0.7)})
+    assert len({a.key(), b.key(), c.key()}) == 3
+
+
+# ---------------------------------------------------------- multi-site plans
+def test_multi_site_plans():
+    from repro.placement.plan import service_options, enumerate_plans
+
+    topo = {"a": [], "b": ["a"]}
+    plan = PlacementPlan({"a": ServicePlacement("gw-1"),
+                          "b": ServicePlacement("dc", chips=4)})
+    # default site universe rejects fleet names; the widened one accepts
+    with pytest.raises(ValueError):
+        plan.validate(topo)
+    plan.validate(topo, sites=("gw-1", "gw-2", "dc"))
+    assert plan.is_edge("a") and not plan.is_edge("b")
+    assert plan.placement("a").label == "gw-1"
+    assert sorted(plan.cuts(topo)) == [("a", "b")]
+
+    opts = service_options(chips_options=(4,), dvfs_options=(1.0,),
+                           edge_sites=("gw-1", "gw-2"))
+    assert [o.site for o in opts] == ["gw-1", "gw-2", "dc"]
+    plans = list(enumerate_plans(["a", "b"], chips_options=(4,),
+                                 edge_sites=("gw-1", "gw-2")))
+    assert len(plans) == 9                # (2 sites + 1 dc option)^2
+    assert PlacementPlan.all_edge(["a"], site="gw-2").site("a") == "gw-2"
+
+
+def test_value_spec_shift_keeps_absolute_decay():
+    """A shift beyond the soft deadline must leave the task *inside* the
+    decay ramp (regression: clamping soft to ~0 re-spread the decay and
+    over-credited slow offloads)."""
+    from repro.placement import ServiceSLO
+    from repro.core.value import task_value
+
+    slo = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
+                     soft_energy_j=1.0, hard_energy_j=60.0)
+    spec = slo.value_spec(shift_s=5.0)    # 5 s already burned pre-DC
+    assert spec.perf_curve.th_soft == pytest.approx(-3.0)
+    assert spec.perf_curve.th_hard == pytest.approx(5.0)
+    # instant DC execution still only earns the 7s-total-latency value
+    v_shifted = spec.perf_curve.value(0.0)
+    v_absolute = slo.value_spec().perf_curve.value(5.0)
+    assert v_shifted == pytest.approx(v_absolute)
+    # and past the shifted hard threshold nothing is earned
+    assert task_value(spec, 5.1, 0.5) == 0.0
+
+
 # ------------------------------------------------- PodGrid.compose regression
 def test_compose_rejects_non_power_of_two_and_small():
     """Docstring promises power-of-two >= 4; validation must agree."""
