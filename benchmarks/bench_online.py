@@ -1,6 +1,10 @@
 """Online fleet controller benchmark: static plans vs oracle-per-epoch
 vs the online controller across drift scenarios → BENCH_online.json.
 
+Each drift scenario is a declarative ScenarioSpec (fleet topology +
+drift schedule + outages + epoching); ``spec.compile()`` yields the same
+unified DES-bridged engine the static placement bench runs through.
+
 Scenarios (2 edge gateways + the DC, shared FIFO-contended uplink):
 
   diurnal_tide   — a ~9× diurnal swing on the farm rate. At the peak the
@@ -9,7 +13,7 @@ Scenarios (2 edge gateways + the DC, shared FIFO-contended uplink):
                    so the optimal home for it flips over the day; the
                    trough favors the DC (VDC floor energy beats a
                    seconds-long edge fire).
-  flash_crowd    — Poisson-burst flash crowds (quiet base, multi-epoch
+  flash_crowd    — trapezoid flash crowds (quiet base, multi-epoch
                    bursts). Static plans either waste the quiet epochs
                    or die in the bursts.
   site_failover  — farms on both gateways, primary gateway fails
@@ -21,7 +25,9 @@ Scenarios (2 edge gateways + the DC, shared FIFO-contended uplink):
 Acceptance (ISSUE 2): online beats the best static plan on >= 2/3
 scenarios, is within 10% of the oracle-per-epoch upper bound on all,
 the per-service and per-site record-conservation ledgers are exact, and
-controller runs are deterministic for a fixed seed.
+controller runs are deterministic for a fixed seed. The online
+controller's per-epoch regret telemetry (forecast-ranked vs co-simulated
+VoS) lands in each epoch record of the report.
 """
 from __future__ import annotations
 
@@ -29,67 +35,67 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
-from repro.online import (DriftingFarm, FleetCoSimulator, FleetSpec,
-                          OnlineConfig, OnlineController, OracleController,
-                          SiteSpec, StaticController, diurnal,
-                          piecewise_linear, plan_on_average_rates)
-from repro.pipeline import (Broker, Pipeline, ServiceConfig, StreamService,
-                            WindowSpec)
-from repro.placement import (PlacementPlan, ServicePlacement, ServiceProfile,
-                             ServiceSLO)
+from repro.online import (OnlineController, OracleController,
+                          StaticController, plan_on_average_rates)
+from repro.placement import PlacementPlan, ServicePlacement
 from repro.placement.edge import EdgeSpec
 from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, ScenarioBuilder, ScenarioSpec, scenario
+
 
 def _out_path(smoke: bool) -> str:
     default = "BENCH_online_smoke.json" if smoke else "BENCH_online.json"
     return os.environ.get("BENCH_ONLINE_OUT", default)
 
 
-def _svc(broker, name, queue, column, agg, width, slide, budget=8192):
-    return StreamService(ServiceConfig(
-        name=name, queue=queue, column=column, agg=agg,
-        window=WindowSpec("sliding", width_s=width, slide_s=slide),
-        buffer_budget=budget), broker)
-
-
 @dataclasses.dataclass
 class OnlineScenario:
     name: str
-    build: Callable[[], Pipeline]
-    profiles: Dict[str, ServiceProfile]
-    cfg: OnlineConfig
-    outages: Dict[str, Tuple[Tuple[float, float], ...]]
+    spec: ScenarioSpec
     prior_rates: Dict[str, float]
     static_plans: Dict[str, PlacementPlan]
     chips_options: Sequence[int] = (4, 8)
 
 
 # ---------------------------------------------------------------------------
-# Shared fabric: two gateways, farm-heavy primary, leaner backup
+# Shared fabric helpers
 # ---------------------------------------------------------------------------
-def _two_site_fleet(uplink_a_bps: float, uplink_b_bps: float,
-                    compression: float = 0.25,
-                    record_bytes: float = 1024.0,
-                    farm_b: Tuple[str, ...] = ()) -> FleetSpec:
-    link_a = LinkSpec(uplink_bps=uplink_a_bps, downlink_bps=20e6,
-                      rtt_s=0.040, record_bytes=record_bytes,
-                      compression=compression)
-    link_b = LinkSpec(uplink_bps=uplink_b_bps, downlink_bps=20e6,
-                      rtt_s=0.060, record_bytes=record_bytes,
-                      compression=compression)
-    return FleetSpec(sites=(
-        SiteSpec("gw-a", EdgeSpec(name="gw-a", active_power_w=8.0), link_a,
-                 farm_queues=("neubotspeed",)),
-        SiteSpec("gw-b", EdgeSpec(name="gw-b", flops_per_s=15e9,
-                                  active_power_w=8.0), link_b,
-                 farm_queues=farm_b),
-    ))
+def _two_site_builder(name: str, uplink_a_bps: float, uplink_b_bps: float,
+                      compression: float = 0.25,
+                      record_bytes: float = 1024.0) -> ScenarioBuilder:
+    """Two gateways, farm-heavy primary, leaner backup."""
+    return (scenario(name)
+            .site("gw-a", edge=EdgeSpec(name="gw-a", active_power_w=8.0),
+                  link=LinkSpec(uplink_bps=uplink_a_bps, downlink_bps=20e6,
+                                rtt_s=0.040, record_bytes=record_bytes,
+                                compression=compression))
+            .site("gw-b", edge=EdgeSpec(name="gw-b", flops_per_s=15e9,
+                                        active_power_w=8.0),
+                  link=LinkSpec(uplink_bps=uplink_b_bps, downlink_bps=20e6,
+                                rtt_s=0.060, record_bytes=record_bytes,
+                                compression=compression)))
 
 
-_LIGHT = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
-                    soft_energy_j=1.0, hard_energy_j=60.0)
+def _tide_builder(name: str) -> ScenarioBuilder:
+    """Ingest-bound gateways (slow record pump, frugal active power) on
+    thin last-mile links with compact delta-coded records."""
+    return (scenario(name)
+            .site("gw-a", edge=EdgeSpec(name="gw-a", throughput_rps=2000.0,
+                                        active_power_w=1.0,
+                                        energy_per_record_j=50e-6),
+                  link=LinkSpec(uplink_bps=15e3, downlink_bps=2e6,
+                                rtt_s=0.040, record_bytes=64.0,
+                                compression=0.25))
+            .site("gw-b", edge=EdgeSpec(name="gw-b", throughput_rps=1500.0,
+                                        flops_per_s=15e9, active_power_w=1.2,
+                                        energy_per_record_j=60e-6),
+                  link=LinkSpec(uplink_bps=12e3, downlink_bps=2e6,
+                                rtt_s=0.060, record_bytes=64.0,
+                                compression=0.25)))
+
+
 # The tide services live on a tight per-fire energy budget spanning the
 # VDC's floor energy (~2.3 J for a composed 4-chip tile at the kernel-
 # launch floor): at low rates an ingest-bound edge fire costs well under
@@ -97,48 +103,25 @@ _LIGHT = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
 # the record rate while the DC's stays flat, so the optimum flips as the
 # tide comes in — and at the peak the edge fire blows the hard energy
 # threshold entirely.
-_TIDE = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
-                   soft_energy_j=0.3, hard_energy_j=3.0)
-_TIDE_HI = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
-                      soft_energy_j=0.3, hard_energy_j=3.0, gamma=2.0)
+def _three_services(b: ScenarioBuilder) -> ScenarioBuilder:
+    (b.service("agg", queue="neubotspeed", column="download_speed",
+               agg="max", width_s=120, slide_s=30, buffer_budget=8192)
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=0.3, hard_energy_j=3.0)
+     .profile(flops_per_record=2e3)
+     .service("pctl", queue="neubotspeed", column="latency_ms",
+              agg="mean", width_s=120, slide_s=30, buffer_budget=16384)
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=0.3, hard_energy_j=3.0, gamma=2.0)
+     .profile(flops_per_record=2e3)
+     .service("trend", queue="agg_out", column="value", agg="mean",
+              width_s=300, slide_s=60, buffer_budget=8192)
+     .fed_by("agg")
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=1.0, hard_energy_j=60.0)
+     .profile(flops_per_record=2e3))
+    return b
 
-
-def _tide_fleet() -> FleetSpec:
-    """Ingest-bound gateways (slow record pump, frugal active power) on
-    thin last-mile links with compact delta-coded records."""
-    link_a = LinkSpec(uplink_bps=15e3, downlink_bps=2e6, rtt_s=0.040,
-                      record_bytes=64.0, compression=0.25)
-    link_b = LinkSpec(uplink_bps=12e3, downlink_bps=2e6, rtt_s=0.060,
-                      record_bytes=64.0, compression=0.25)
-    edge_a = EdgeSpec(name="gw-a", throughput_rps=2000.0,
-                      active_power_w=1.0, energy_per_record_j=50e-6)
-    edge_b = EdgeSpec(name="gw-b", throughput_rps=1500.0,
-                      flops_per_s=15e9, active_power_w=1.2,
-                      energy_per_record_j=60e-6)
-    return FleetSpec(sites=(
-        SiteSpec("gw-a", edge_a, link_a, farm_queues=("neubotspeed",)),
-        SiteSpec("gw-b", edge_b, link_b),
-    ))
-
-
-def _pipe_three(make_farm: Callable[[Broker], DriftingFarm]) -> Pipeline:
-    b = Broker()
-    pipe = Pipeline(b)
-    pipe.add_farm(make_farm(b))
-    agg = _svc(b, "agg", "neubotspeed", "download_speed", "max", 120, 30)
-    pctl = _svc(b, "pctl", "neubotspeed", "latency_ms", "mean", 120, 30,
-                budget=16384)
-    trend = _svc(b, "trend", "agg_out", "value", "mean", 300, 60)
-    pipe.add_service(agg).add_service(pctl).add_service(trend)
-    pipe.connect(agg, "agg_out")
-    return pipe
-
-
-_PROFILES_3 = {
-    "agg": ServiceProfile(_TIDE, flops_per_record=2e3),
-    "pctl": ServiceProfile(_TIDE_HI, flops_per_record=2e3),
-    "trend": ServiceProfile(_LIGHT, flops_per_record=2e3),
-}
 
 _NAMES_3 = ("agg", "pctl", "trend")
 
@@ -154,27 +137,19 @@ def _static_plans_3() -> Dict[str, PlacementPlan]:
     }
 
 
-def _tide_cfg(horizon: float) -> OnlineConfig:
-    return OnlineConfig(fleet=_tide_fleet(), horizon_s=horizon,
-                        epoch_s=300.0, dc_step_floor_s=2e-3)
-
-
 _TIDE_PRIORS = {"agg": 8.0, "pctl": 8.0, "trend": 0.02}
 
 
 def scenario_diurnal_tide(smoke: bool = False) -> OnlineScenario:
     horizon = 1800.0 if smoke else 3600.0
-    curve = diurnal(5.0, amplitude=0.8, period_s=horizon,
-                    phase_s=horizon / 4)     # trough first, peak mid-run
-
-    def build():
-        return _pipe_three(lambda b: DriftingFarm(b, curve, n_things=8,
-                                                  seed=11))
-
-    return OnlineScenario(
-        "diurnal_tide", build, dict(_PROFILES_3),
-        _tide_cfg(horizon), outages={},
-        prior_rates=dict(_TIDE_PRIORS), static_plans=_static_plans_3())
+    rate = RateSpec.diurnal(5.0, amplitude=0.8, period_s=horizon,
+                            phase_s=horizon / 4)   # trough first, peak mid
+    b = (_three_services(_tide_builder("diurnal_tide"))
+         .horizon(horizon).epochs(300.0).dc(dc_step_floor_s=2e-3)
+         .farm(n_things=8, seed=11, rate=rate, site="gw-a"))
+    return OnlineScenario("diurnal_tide", b.build(),
+                          prior_rates=dict(_TIDE_PRIORS),
+                          static_plans=_static_plans_3())
 
 
 def scenario_flash_crowd(smoke: bool = False) -> OnlineScenario:
@@ -185,51 +160,40 @@ def scenario_flash_crowd(smoke: bool = False) -> OnlineScenario:
     else:
         knots = [(0.0, 1.0), (1200.0, 1.0), (1500.0, 9.0), (2100.0, 9.0),
                  (2400.0, 1.0), (horizon, 1.0)]
-    curve = piecewise_linear(knots)
-
-    def build():
-        return _pipe_three(lambda b: DriftingFarm(b, curve, n_things=8,
-                                                  seed=23))
-
-    return OnlineScenario(
-        "flash_crowd", build, dict(_PROFILES_3),
-        _tide_cfg(horizon), outages={},
-        prior_rates=dict(_TIDE_PRIORS), static_plans=_static_plans_3())
+    b = (_three_services(_tide_builder("flash_crowd"))
+         .horizon(horizon).epochs(300.0).dc(dc_step_floor_s=2e-3)
+         .farm(n_things=8, seed=23, rate=RateSpec.piecewise(knots),
+               site="gw-a"))
+    return OnlineScenario("flash_crowd", b.build(),
+                          prior_rates=dict(_TIDE_PRIORS),
+                          static_plans=_static_plans_3())
 
 
 def scenario_site_failover(smoke: bool = False) -> OnlineScenario:
     horizon = 1800.0 if smoke else 3600.0
     out_lo, out_hi = (600.0, 1200.0) if smoke else (1200.0, 2400.0)
-
-    def build():
-        b = Broker()
-        pipe = Pipeline(b)
-        pipe.add_farm(DriftingFarm(b, diurnal(3.0, amplitude=0.3,
-                                              period_s=horizon, phase_s=0.0),
-                                   queue="neubotspeed", n_things=6, seed=37))
-        pipe.add_farm(DriftingFarm(b, diurnal(3.0, amplitude=0.3,
-                                              period_s=horizon,
-                                              phase_s=horizon / 2),
-                                   queue="auxspeed", n_things=6, seed=41))
-        agg_a = _svc(b, "agg_a", "neubotspeed", "download_speed", "max",
-                     120, 30)
-        agg_b = _svc(b, "agg_b", "auxspeed", "download_speed", "max",
-                     120, 30)
-        fuse = _svc(b, "fuse", "agg_out", "value", "mean", 300, 60)
-        pipe.add_service(agg_a).add_service(agg_b).add_service(fuse)
-        pipe.connect(agg_a, "agg_out")
-        pipe.connect(agg_b, "agg_out")
-        return pipe
-
-    profiles = {
-        "agg_a": ServiceProfile(_LIGHT, flops_per_record=2e3),
-        "agg_b": ServiceProfile(_LIGHT, flops_per_record=2e3),
-        "fuse": ServiceProfile(_LIGHT, flops_per_record=2e3),
-    }
-    fleet = _two_site_fleet(uplink_a_bps=30e3, uplink_b_bps=30e3,
-                            farm_b=("auxspeed",))
-    cfg = OnlineConfig(fleet=fleet, horizon_s=horizon,
-                       epoch_s=300.0 if smoke else 600.0)
+    b = (_two_site_builder("site_failover", uplink_a_bps=30e3,
+                           uplink_b_bps=30e3)
+         .horizon(horizon).epochs(300.0 if smoke else 600.0)
+         .outage("gw-a", out_lo, out_hi)
+         .farm(queue="neubotspeed", n_things=6, seed=37, site="gw-a",
+               rate=RateSpec.diurnal(3.0, amplitude=0.3, period_s=horizon,
+                                     phase_s=0.0))
+         .farm(queue="auxspeed", n_things=6, seed=41, site="gw-b",
+               rate=RateSpec.diurnal(3.0, amplitude=0.3, period_s=horizon,
+                                     phase_s=horizon / 2)))
+    for name, queue in (("agg_a", "neubotspeed"), ("agg_b", "auxspeed")):
+        (b.service(name, queue=queue, column="download_speed", agg="max",
+                   width_s=120, slide_s=30, buffer_budget=8192)
+         .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+              soft_energy_j=1.0, hard_energy_j=60.0)
+         .profile(flops_per_record=2e3))
+    (b.service("fuse", queue="agg_out", column="value", agg="mean",
+               width_s=300, slide_s=60, buffer_budget=8192)
+     .fed_by("agg_a", "agg_b")
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=1.0, hard_energy_j=60.0)
+     .profile(flops_per_record=2e3))
     names = ("agg_a", "agg_b", "fuse")
     statics = {
         "pin-gw-a": PlacementPlan.all_edge(list(names), site="gw-a"),
@@ -241,8 +205,7 @@ def scenario_site_failover(smoke: bool = False) -> OnlineScenario:
             "fuse": ServicePlacement("gw-a")}),
     }
     return OnlineScenario(
-        "site_failover", build, profiles, cfg,
-        outages={"gw-a": ((out_lo, out_hi),)},
+        "site_failover", b.build(),
         prior_rates={"agg_a": 18.0, "agg_b": 18.0, "fuse": 0.05},
         static_plans=statics)
 
@@ -254,7 +217,7 @@ SCENARIOS = (scenario_diurnal_tide, scenario_flash_crowd,
 # ---------------------------------------------------------------------------
 def run_scenario(sc: OnlineScenario, seed: int = 0) -> Dict:
     t0 = time.perf_counter()
-    cs = FleetCoSimulator(sc.build, sc.profiles, sc.cfg, outages=sc.outages)
+    cs = sc.spec.compile()
     true_rates = cs.true_epoch_rates()
     avg_rates = {s: sum(r[s] for r in true_rates) / len(true_rates)
                  for s in cs.order}
@@ -293,13 +256,24 @@ def run_scenario(sc: OnlineScenario, seed: int = 0) -> Dict:
     beats_static = r_online.vos > best_static[1].vos
     within_oracle = (r_oracle.vos <= 0.0
                      or r_online.vos >= 0.9 * r_oracle.vos)
+    regret = [e.get("forecast", {}) for e in r_online.summary()["epochs"]]
     return {
+        "spec": sc.spec.to_dict(),
         "statics": statics,
         "best_static": {"label": best_static[0],
                         "vos": round(best_static[1].vos, 4)},
         "online": r_online.summary(),
         "oracle": r_oracle.summary(),
         "avg_rates": {k: round(v, 3) for k, v in avg_rates.items()},
+        "forecast_regret": {
+            "epochs_with_telemetry": sum(1 for r in regret if r),
+            "mean_search_regret": round(
+                sum(r.get("search_regret") or 0.0 for r in regret)
+                / max(1, len(regret)), 4),
+            "mean_calibration_gap": round(
+                sum(abs(r.get("calibration_gap") or 0.0) for r in regret)
+                / max(1, len(regret)), 4),
+        },
         "acceptance": {
             "online_beats_best_static": bool(beats_static),
             "within_10pct_of_oracle": bool(within_oracle),

@@ -34,11 +34,15 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 scenario per stream bench at "
                          "reduced trace length")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="placement bench: measure flops_per_record from "
+                         "Pallas kernel dry-runs (repro.scenario.calibrate) "
+                         "instead of the declared profile values")
     ap.add_argument("--no-emulation", action="store_true")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
-    if args.smoke and want is None:
-        want = {"placement", "online"}
+    if (args.smoke or args.calibrate) and want is None:
+        want = {"placement", "online"} if args.smoke else {"placement"}
 
     csv_rows: list = []
     failures = []
@@ -59,7 +63,8 @@ def main() -> None:
     run("fig5", bench_power_capping.main, csv_rows,
         emulate=not args.no_emulation)
     run("pipeline", bench_pipeline.main, csv_rows)
-    run("placement", bench_placement.main, csv_rows, smoke=args.smoke)
+    run("placement", bench_placement.main, csv_rows, smoke=args.smoke,
+        calibrate=args.calibrate)
     run("online", bench_online.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)

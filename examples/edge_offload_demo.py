@@ -1,14 +1,16 @@
-"""Edge↔DC placement in action: co-simulate the benchmark's
-heavy-analytics Neubot pipeline under every placement of interest and
-watch the search pick the SLO-optimal split — the heavy CNN-scoring
-service offloaded onto a JIT-composed VDC, the cheap aggregations left
-on the gateway.
+"""Edge↔DC placement in action: declare the benchmark's heavy-analytics
+Neubot scenario as a ScenarioSpec, compile it into the unified
+DES-bridged engine, co-simulate every placement of interest and watch
+the search pick the SLO-optimal split — the heavy CNN-scoring service
+offloaded onto a JIT-composed VDC, the cheap aggregations left on the
+gateway.
 
-Reuses the exact scenario from ``benchmarks/bench_placement.py`` so the
+Reuses the exact spec from ``benchmarks/bench_placement.py`` so the
 demo always illustrates the benchmarked behavior.
 
-  PYTHONPATH=src python examples/edge_offload_demo.py
+  PYTHONPATH=src python examples/edge_offload_demo.py [--smoke]
 """
+import dataclasses
 import os
 import sys
 
@@ -17,25 +19,30 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))   # repro without PYTHONPATH
 sys.path.insert(0, _ROOT)                        # benchmarks package
 
 from benchmarks.bench_placement import scenario_heavy_analytics  # noqa: E402
-from repro.placement import (CoSimulator, PlacementPlan,          # noqa: E402
-                             search_placement)
+from repro.placement import PlacementPlan, search_placement      # noqa: E402
+
+SMOKE = "--smoke" in sys.argv
 
 sc = scenario_heavy_analytics()
-cosim = CoSimulator(sc.build, sc.profiles, sc.cfg)
-names = list(cosim.topology)
-print(f"scenario: {sc.name}\npipeline DAG: {cosim.topology}\n")
+spec = sc.spec
+if SMOKE:
+    spec = dataclasses.replace(spec, horizon_s=240.0)
+engine = spec.compile()
+names = list(engine.topology)
+print(f"scenario: {spec.name} (spec -> compile -> run)")
+print(f"pipeline DAG: {engine.topology}\n")
 
 print(f"{'plan':46s} {'VoS':>7s} {'norm':>6s} {'p95 lat':>8s} "
       f"{'edge J':>8s} {'net J':>7s} {'DC J':>8s}")
 for plan in (PlacementPlan.all_edge(names),
              PlacementPlan.all_dc(names, chips=sc.chips_options[0])):
-    r = cosim.run(plan)
+    r = engine.run_plan(plan)
     print(f"{plan.label:46s} {r.vos:7.2f} {r.vos_normalized:6.3f} "
           f"{r.latency_p95:8.3f} {r.edge_energy_j:8.2f} "
           f"{r.network_energy_j:7.3f} {r.dc_energy_j:8.2f}")
 
-sr = search_placement(cosim, chips_options=sc.chips_options,
-                      dvfs_options=(1.0, 0.7))
+sr = search_placement(engine, chips_options=sc.chips_options,
+                      dvfs_options=(1.0,) if SMOKE else (1.0, 0.7))
 r = sr.result
 print(f"{sr.plan.label:46s} {r.vos:7.2f} {r.vos_normalized:6.3f} "
       f"{r.latency_p95:8.3f} {r.edge_energy_j:8.2f} "
@@ -58,3 +65,6 @@ if r.dc is not None:
     print(f"\nDC side: {r.dc.completed} VDC tasks completed, "
           f"{r.dc.dropped} dropped, utilization={r.dc.avg_utilization:.1%}, "
           f"heuristic={r.dc.heuristic}")
+
+assert r.feasible and r.ledger.conserved(), "demo co-sim must conserve"
+print("\nOK" if SMOKE else "")

@@ -1,0 +1,82 @@
+"""API-surface check (scripts/ci.sh): the public exports of the
+scenario / placement / online packages must import and resolve, and
+every bundled benchmark ScenarioSpec must round-trip losslessly through
+JSON (spec == from_json(to_json(spec))) — the property that makes
+scenarios re-targetable data rather than code.
+
+  PYTHONPATH=src python scripts/api_surface.py
+"""
+import importlib
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+SURFACE = {
+    "repro.scenario": (
+        "ScenarioSpec", "ScenarioBuilder", "scenario", "ServiceSpec",
+        "FarmSpec", "RateSpec", "StoreSpec", "ScenarioEngine",
+        "EngineConfig", "EngineResult", "CoSimResult", "ServiceProfile",
+        "ServiceSLO", "KernelCalibrator", "calibrate_profiles",
+        "RecordLedger", "ServiceLedger", "BridgeInfo", "EpochObservation",
+        "analytics_cost_model", "single_site_fleet"),
+    "repro.placement": (
+        "EdgeNode", "EdgeSpec", "LinkSpec", "NetworkModel", "PlacementPlan",
+        "ServicePlacement", "CoSimConfig", "CoSimResult", "CoSimulator",
+        "ServiceProfile", "ServiceSLO", "Evaluator", "search_placement",
+        "exhaustive_search", "greedy_search", "enumerate_plans"),
+    "repro.online": (
+        "Fleet", "FleetSpec", "SiteSpec", "ContendedUplink", "DriftingFarm",
+        "FleetCoSimulator", "OnlineConfig", "OnlineResult", "BridgeInfo",
+        "EpochObservation", "OnlineController", "OracleController",
+        "StaticController", "ForecastModel", "plan_on_average_rates",
+        "diurnal", "piecewise_linear", "poisson_bursts", "step_bursts"),
+}
+
+
+def check_exports() -> int:
+    bad = 0
+    for module, names in SURFACE.items():
+        mod = importlib.import_module(module)
+        for name in names:
+            if getattr(mod, name, None) is None:
+                print(f"MISSING: {module}.{name}")
+                bad += 1
+    print(f"exports: {sum(len(v) for v in SURFACE.values())} names across "
+          f"{len(SURFACE)} packages, {bad} missing")
+    return bad
+
+
+def check_roundtrips() -> int:
+    from benchmarks import bench_online, bench_placement
+    from repro.scenario import ScenarioSpec
+
+    specs = [make().spec for make in bench_placement.SCENARIOS]
+    for make in bench_online.SCENARIOS:
+        specs.append(make(smoke=True).spec)
+        specs.append(make(smoke=False).spec)
+    bad = 0
+    for spec in specs:
+        back = ScenarioSpec.from_json(spec.to_json())
+        if back != spec:
+            print(f"ROUND-TRIP MISMATCH: {spec.name}")
+            bad += 1
+        else:
+            # a round-tripped spec must also still compile
+            back.validate()
+    print(f"json round-trip: {len(specs)} bundled benchmark specs, "
+          f"{bad} mismatched")
+    return bad
+
+
+def main() -> None:
+    bad = check_exports() + check_roundtrips()
+    if bad:
+        sys.exit(f"api_surface: {bad} failures")
+    print("api_surface: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,16 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
+if [[ "${CI_SKIP_API_SURFACE:-0}" != "1" ]]; then
+    echo "== API surface (scripts/ci.sh; CI_SKIP_API_SURFACE=1 to skip) =="
+    # public exports import-check + ScenarioSpec JSON round-trip on the
+    # bundled benchmark scenarios, then both edge examples end-to-end
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/api_surface.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/edge_offload_demo.py --smoke >/dev/null
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/edge_pipeline.py --smoke >/dev/null
+    echo "examples (--smoke): OK"
+fi
+
 if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     echo "== benchmark smoke (scripts/ci.sh; CI_SKIP_BENCH_SMOKE=1 to skip) =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names the TPU compile options TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, o_ref, h_ref, *,
                 chunk: int):
@@ -86,7 +90,7 @@ def ssd_scan_bhl(x: jax.Array, dt: jax.Array, da: jax.Array, B_: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, P), lambda bh, j: (bh, j, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, L, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, da, B_, C)

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names the TPU compile options TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 INIT = {"max": -3.4e38, "min": 3.4e38, "sum": 0.0}
 
 
@@ -56,7 +60,7 @@ def segment_reduce_tc(x: jax.Array, *, agg: str, stride: int,
                                lambda o, c: (o, c))],
         out_specs=pl.BlockSpec((block_o, block_c), lambda o, c: (o, c)),
         out_shape=jax.ShapeDtypeStruct((n_seg, C), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -12,12 +12,14 @@ JITA4DS framing describes it:
                  bursts, site failure/recovery windows
   controller.py  epoch-based re-placement (reuses placement.search over
                  an analytic forecast), oracle + static baselines,
-                 migration hysteresis
-  des_bridge.py  FleetCoSimulator — incremental DC task submission into
-                 one persistent JITA-4DS Simulator (no optimistic
-                 handoff estimates), migration state shipped via the
-                 elastic cost model, per-service *and* per-site record
-                 conservation
+                 migration hysteresis, per-epoch regret telemetry
+  des_bridge.py  DEPRECATED shim — the incremental DES bridge is the
+                 unified engine now (``repro.scenario.engine``);
+                 ``FleetCoSimulator`` aliases ``ScenarioEngine``
+
+The bridge/controller names resolve lazily so the shim's import of
+``repro.scenario`` cannot cycle back through this package's eager
+imports.
 """
 from repro.online.fleet import (ContendedUplink, EdgeSite, Fleet, FleetSpec,
                                 SiteSpec)
@@ -25,10 +27,28 @@ from repro.online.drift import (DriftScenario, DriftingFarm,
                                 DriftingProducer, constant, diurnal,
                                 piecewise_linear, poisson_bursts,
                                 step_bursts)
-from repro.online.des_bridge import (BridgeInfo, EpochObservation,
-                                     FleetCoSimulator, OnlineConfig,
-                                     OnlineResult, ServiceInfo)
-from repro.online.controller import (ForecastModel, ForecastResult,
-                                     OnlineController, OracleController,
-                                     StaticController,
-                                     plan_on_average_rates)
+
+_BRIDGE_NAMES = ("BridgeInfo", "EpochObservation", "FleetCoSimulator",
+                 "OnlineConfig", "OnlineResult", "ServiceInfo")
+_CONTROLLER_NAMES = ("ForecastModel", "ForecastResult", "OnlineController",
+                     "OracleController", "StaticController",
+                     "plan_on_average_rates")
+
+__all__ = ["ContendedUplink", "EdgeSite", "Fleet", "FleetSpec", "SiteSpec",
+           "DriftScenario", "DriftingFarm", "DriftingProducer", "constant",
+           "diurnal", "piecewise_linear", "poisson_bursts", "step_bursts",
+           *_BRIDGE_NAMES, *_CONTROLLER_NAMES]
+
+
+def __getattr__(name):
+    if name in _BRIDGE_NAMES:
+        from repro.online import des_bridge
+        return getattr(des_bridge, name)
+    if name in _CONTROLLER_NAMES:
+        from repro.online import controller
+        return getattr(controller, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -18,13 +18,13 @@ chosen schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence
 
 from repro.core.value import task_value
-from repro.online.des_bridge import BridgeInfo, EpochObservation
 from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
+from repro.scenario.engine import BridgeInfo, EpochObservation
 
 _NEVER_S = 1e9          # latency that zeroes any value curve
 
@@ -258,7 +258,15 @@ class OnlineController:
     """Sliding-estimate re-placement: search the plan space against the
     forecast model each epoch; switch (and pay migrations) only when the
     forecast win clears ``switch_margin``, or the live plan went
-    infeasible (site failure / RAM)."""
+    infeasible (site failure / RAM).
+
+    Every ``decide`` appends one regret-telemetry entry: the forecast
+    VoS of the search's best plan, of the plan actually played
+    (hysteresis may keep the incumbent), and their gap
+    (``search_regret``). The engine merges the realized per-epoch co-sim
+    VoS into the same record (``cosim_vos`` / ``calibration_gap``) —
+    the measurement the ROADMAP's fleet-aware forecast calibration item
+    needs."""
     charge_migrations = True
     label = "online"
 
@@ -274,9 +282,11 @@ class OnlineController:
         self.seed = seed
         self.prior_rates = dict(prior_rates) if prior_rates else None
         self.current: Optional[PlacementPlan] = None
+        self.telemetry: List[Dict] = []
 
     def bind(self, info: BridgeInfo) -> None:
         self.info = info
+        self.telemetry = []   # bind() marks a run start: drop stale entries
 
     # ------------------------------------------------------------ estimate
     def _estimate(self, obs: EpochObservation) -> Dict[str, float]:
@@ -306,17 +316,28 @@ class OnlineController:
         sr = search_placement(model, self.chips_options, self.dvfs_options,
                               seed=self.seed, edge_sites=edge_sites)
         best = sr.plan
-        if self.current is None:
-            self.current = best
-            return best
-        cur = model.run(self.current)
         new = model.run(best)
-        must_switch = not cur.feasible
-        margin_ok = (new.feasible and cur.feasible
-                     and new.vos > cur.vos * (1.0 + self.switch_margin)
-                     + 1e-9)
-        if must_switch or margin_ok:
-            self.current = best
+        switched = True
+        if self.current is None:
+            self.current, chosen = best, new
+        else:
+            cur = model.run(self.current)
+            must_switch = not cur.feasible
+            margin_ok = (new.feasible and cur.feasible
+                         and new.vos > cur.vos * (1.0 + self.switch_margin)
+                         + 1e-9)
+            if must_switch or margin_ok:
+                self.current, chosen = best, new
+            else:
+                chosen, switched = cur, False
+        self.telemetry.append({
+            "epoch": obs.epoch,
+            "best_vos": round(new.vos, 4) if new.feasible else None,
+            "chosen_vos": round(chosen.vos, 4) if chosen.feasible else None,
+            "search_regret": round(max(0.0, new.vos - chosen.vos), 4)
+            if new.feasible and chosen.feasible else None,
+            "switched": switched,
+        })
         return self.current
 
 

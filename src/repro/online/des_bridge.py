@@ -1,735 +1,24 @@
-"""Fleet co-simulator with incremental DC task submission.
+"""DEPRECATED location — the fleet co-simulator *is* the unified
+scenario engine now (``repro.scenario.engine``).
 
-This replaces the single-site co-simulator's two-pass optimistic DC
-handoff with *online* submission into one persistent JITA-4DS
-:class:`~repro.core.simulator.Simulator`: a DC-placed fire's task enters
-the live event heap the moment its inputs exist (``Simulator.inject``),
-and a downstream fire waits for the task's *actual* completion event —
-VDC composition pressure, power-cap contention and scheduler drops are
-co-simulated, never estimated. Grid occupancy and pending backlog
-persist across controller epochs, so a placement switch inherits the
-DC's real queue state.
+The incremental event-feed DES bridge that debuted here (one persistent
+JITA-4DS Simulator, ``inject``-as-produced, migration stalls via the
+elastic cost model, per-service and per-site conservation ledgers) was
+generalized to cover the single-site case as well and moved to
+:mod:`repro.scenario.engine`; this module keeps the historical names
+importable:
 
-The functional dataflow (drift-modulated farms → brokers → services) is
-driven exactly once — it does not depend on placement — and the timing /
-energy of every fire is then replayed under a *plan schedule*: at each
-epoch boundary a controller (static, online, or oracle — see
-``repro.online.controller``) decides the placement for the coming epoch;
-site moves ship operator state over the contended uplink and stall the
-service for a warm-up (cost math from ``repro.core.elastic``) before the
-new placement takes effect.
+  ``FleetCoSimulator``  → :class:`repro.scenario.engine.ScenarioEngine`
+  ``OnlineConfig``      → :class:`repro.scenario.engine.EngineConfig`
+  ``OnlineResult``      → :class:`repro.scenario.engine.EngineResult`
 
-Fire life-cycle::
-
-    new ──deps settled──► queued  (edge)  ──device──► done
-                      └─► inflight (dc, task injected) ─► done | failed
-
-A fire's dependencies are every upstream fire with an earlier timestamp;
-cross-site results and record hauls route through the fleet (FIFO-
-contended shared uplink). Record conservation is tracked per service
-*and* per site with exact set partitions.
+New code should build engines from a declarative
+:class:`~repro.scenario.spec.ScenarioSpec` via ``spec.compile()``.
 """
-from __future__ import annotations
+from repro.scenario.engine import (BridgeInfo, EngineConfig,  # noqa: F401
+                                   EngineResult, EpochObservation,
+                                   ScenarioEngine, ServiceInfo)
 
-import bisect
-import dataclasses
-import heapq
-import math
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
-
-import numpy as np
-
-from repro import hardware as hw
-from repro.core.costmodel import CostModel
-from repro.core.elastic import (SERVICE_WARMUP_S, ServiceMigration,
-                                plan_replacement)
-from repro.core.simulator import SimResult, Simulator
-from repro.core.tasks import Task, TaskType
-from repro.core.value import task_value
-from repro.core.vdc import PodGrid
-from repro.online.fleet import Fleet, FleetSpec
-from repro.pipeline.composition import Pipeline
-from repro.placement.cosim import (RecordLedger, ServiceLedger,
-                                   ServiceProfile, _PublisherContext,
-                                   _QueueTap, _ServiceTap, _fresh_heuristic,
-                                   _topo_order, analytics_cost_model)
-from repro.placement.plan import SITE_DC, PlacementPlan
-
-_EPS = 1e-9
-
-
-@dataclasses.dataclass
-class OnlineConfig:
-    fleet: FleetSpec
-    horizon_s: float = 3600.0
-    epoch_s: float = 600.0
-    drive_step_s: Optional[float] = None   # None -> min service slide
-    heuristic: str = "hinted"
-    power_cap_w: Optional[float] = None
-    records_per_step: int = 5_000
-    dc_step_floor_s: float = 1e-3
-    mxu_efficiency: float = 0.5
-    grid_shape: Tuple[int, int] = (hw.POD_X, hw.POD_Y)
-    migration_warmup_s: float = SERVICE_WARMUP_S
-    # Wire footprint of migrated operator state per buffered record. The
-    # operator ships compacted window state (partial aggregates + record
-    # index), not the raw 64 B in-RAM records.
-    state_bytes_per_record: float = 16.0
-
-
-@dataclasses.dataclass(frozen=True)
-class ServiceInfo:
-    """Static per-service facts a controller may plan with."""
-    queue: str
-    slide_s: float
-    width_s: float
-    buffer_budget: int
-
-
-@dataclasses.dataclass(frozen=True)
-class BridgeInfo:
-    """Snapshot handed to controllers at run start (``controller.bind``)."""
-    topology: Dict[str, List[str]]
-    profiles: Dict[str, ServiceProfile]
-    fleet: FleetSpec
-    services: Dict[str, ServiceInfo]
-    cost: CostModel
-    grid_chips: int
-    epoch_s: float
-    records_per_step: int
-    outages: Dict[str, Tuple[Tuple[float, float], ...]]
-
-
-@dataclasses.dataclass
-class EpochObservation:
-    """What a controller sees at an epoch boundary. ``*_oracle`` fields
-    are ground truth about the *coming* epoch — only the clairvoyant
-    baseline may read them; honest controllers plan from the observed
-    past (``rates_window``) and the instantaneous site health."""
-    epoch: int
-    t0: float
-    t1: float
-    rates_window: List[Dict[str, float]]      # per completed epoch, oldest first
-    down_now: Dict[str, bool]
-    rates_oracle: Dict[str, float]
-    down_oracle: Dict[str, bool]
-
-    @property
-    def rates_prev(self) -> Optional[Dict[str, float]]:
-        return self.rates_window[-1] if self.rates_window else None
-
-
-@dataclasses.dataclass
-class _OFire:
-    svc: str
-    idx: int
-    ts: float
-    epoch: int
-    n_window: int
-    n_new: int
-    origins: Dict[Optional[str], int]
-    site: str = ""
-    state: str = "new"            # new|queued|inflight|done|failed
-    start: float = 0.0
-    ready_out: Optional[float] = None
-    energy_j: float = 0.0
-    value: float = 0.0
-    dropped: bool = False
-    pending: bool = False
-    arrival_at: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-    @property
-    def terminal(self) -> bool:
-        return self.state in ("done", "failed")
-
-
-@dataclasses.dataclass
-class OnlineResult:
-    label: str
-    vos: float
-    vos_normalized: float
-    fires_total: int
-    fires_completed: int
-    fires_dropped: int
-    fires_inflight: int
-    latency_p50: float
-    latency_p95: float
-    latency_p99: float
-    edge_energy_j: float
-    network_energy_j: float
-    dc_energy_j: float
-    bytes_up: float
-    bytes_down: float
-    uplink_wait_s: float
-    uplink_transfers: int
-    migrations: int
-    ledger: RecordLedger
-    per_site: Dict[str, Dict]
-    epochs: List[Dict]
-    dc: Optional[SimResult] = None
-
-    @property
-    def energy_total_j(self) -> float:
-        return self.edge_energy_j + self.network_energy_j + self.dc_energy_j
-
-    def summary(self) -> Dict:
-        def _num(x):
-            return None if math.isnan(x) or math.isinf(x) else round(x, 4)
-        return {
-            "label": self.label,
-            "vos": round(self.vos, 4),
-            "vos_normalized": round(self.vos_normalized, 4),
-            "fires": {"total": self.fires_total,
-                      "completed": self.fires_completed,
-                      "dropped": self.fires_dropped,
-                      "inflight": self.fires_inflight},
-            "latency_s": {"p50": _num(self.latency_p50),
-                          "p95": _num(self.latency_p95),
-                          "p99": _num(self.latency_p99)},
-            "energy_j": {"edge": round(self.edge_energy_j, 2),
-                         "network": round(self.network_energy_j, 2),
-                         "dc": round(self.dc_energy_j, 2)},
-            "bytes": {"up": int(self.bytes_up), "down": int(self.bytes_down)},
-            "uplink": {"fifo_wait_s": round(self.uplink_wait_s, 3),
-                       "transfers": self.uplink_transfers},
-            "migrations": self.migrations,
-            "records": self.ledger.totals(),
-            "per_site": self.per_site,
-            "epochs": self.epochs,
-        }
-
-
-class FleetCoSimulator:
-    """Co-simulates one drift scenario's pipeline across a multi-site
-    fleet under a controller-produced plan schedule. ``build`` must
-    return a fresh Pipeline (with drift-modulated farms) on every call;
-    the functional drive is cached so several controllers (static /
-    oracle / online) replay identical record streams."""
-
-    def __init__(self, build: Callable[[], Pipeline],
-                 profiles: Dict[str, ServiceProfile],
-                 cfg: OnlineConfig,
-                 outages: Optional[Mapping[str, Sequence[Tuple[float, float]]]]
-                 = None):
-        self.build = build
-        self.profiles = dict(profiles)
-        self.cfg = cfg
-        self.outages = {k: tuple(v) for k, v in (outages or {}).items()}
-        pipe = build()
-        self.topology = pipe.topology()
-        names = [s.cfg.name for s in pipe.services]
-        if len(set(names)) != len(names):
-            raise ValueError(f"duplicate service names: {names}")
-        missing = set(self.topology) - set(self.profiles)
-        if missing:
-            raise ValueError(f"no ServiceProfile for {sorted(missing)}")
-        self.order = _topo_order(self.topology, names)
-        self.rank = {s: i for i, s in enumerate(self.order)}
-        self.cost = analytics_cost_model(self.profiles, cfg)
-        self.services_info = {
-            s.cfg.name: ServiceInfo(queue=s.cfg.queue,
-                                    slide_s=s.cfg.window.slide_s,
-                                    width_s=s.cfg.window.width_s,
-                                    buffer_budget=s.cfg.buffer_budget)
-            for s in pipe.services}
-        self.all_sites = tuple(cfg.fleet.site_names) + (SITE_DC,)
-        # epoch boundaries (last epoch absorbs any sub-epoch remainder)
-        bounds, t = [], 0.0
-        while t < cfg.horizon_s - _EPS:
-            t1 = min(t + cfg.epoch_s, cfg.horizon_s)
-            if cfg.horizon_s - t1 < cfg.epoch_s * 0.5:
-                t1 = cfg.horizon_s
-            bounds.append((t, t1))
-            t = t1
-        self.epochs = bounds
-        self._fresh_pipe: Optional[Pipeline] = pipe
-        self._driven = None
-
-    # --------------------------------------------------------------- driving
-    def _ensure_driven(self):
-        if self._driven is None:
-            pipe, self._fresh_pipe = self._fresh_pipe or self.build(), None
-            ctx = _PublisherContext()
-            qtaps: Dict[int, _QueueTap] = {}
-            for s in pipe.services:
-                if id(s.q) not in qtaps:
-                    qtaps[id(s.q)] = _QueueTap(s.q, ctx)
-            staps = {s.cfg.name: _ServiceTap(s, qtaps[id(s.q)], ctx)
-                     for s in pipe.services}
-            by_service = {s.cfg.name: qtaps[id(s.q)] for s in pipe.services}
-            step = self.cfg.drive_step_s or min(
-                s.cfg.window.slide_s for s in pipe.services)
-            t = 0.0
-            while t < self.cfg.horizon_s - 1e-6:
-                t = min(t + step, self.cfg.horizon_s)
-                pipe.advance_to(t)
-            self._driven = (pipe, staps, by_service)
-        return self._driven
-
-    def _epoch_of(self, ts: float) -> int:
-        for k, (t0, t1) in enumerate(self.epochs):
-            if ts < t1 or k == len(self.epochs) - 1:
-                return k
-        return len(self.epochs) - 1
-
-    def true_epoch_rates(self) -> List[Dict[str, float]]:
-        """Ground-truth newly-covered-records/s per service per epoch
-        (drive-derived; what the oracle plans with)."""
-        _, staps, _ = self._ensure_driven()
-        out = [{s: 0.0 for s in self.order} for _ in self.epochs]
-        for svc, tap in staps.items():
-            for fr in tap.fires:
-                k = self._epoch_of(fr.ts)
-                out[k][svc] += fr.n_new
-        for k, (t0, t1) in enumerate(self.epochs):
-            for svc in out[k]:
-                out[k][svc] /= max(t1 - t0, _EPS)
-        return out
-
-    def info(self) -> BridgeInfo:
-        return BridgeInfo(topology=self.topology, profiles=self.profiles,
-                          fleet=self.cfg.fleet, services=self.services_info,
-                          cost=self.cost,
-                          grid_chips=(self.cfg.grid_shape[0]
-                                      * self.cfg.grid_shape[1]),
-                          epoch_s=self.cfg.epoch_s,
-                          records_per_step=self.cfg.records_per_step,
-                          outages=self.outages)
-
-    # ------------------------------------------------------------- plumbing
-    def _site_ram_ok(self, plan: PlacementPlan) -> Optional[str]:
-        for name in self.cfg.fleet.site_names:
-            spec = self.cfg.fleet.site(name).edge
-            budget = sum(self.services_info[s].buffer_budget
-                         for s in self.order if plan.site(s) == name)
-            if spec.ram_required(budget) > spec.ram_bytes:
-                return (f"site {name}: buffer budget needs "
-                        f"{spec.ram_required(budget)/2**20:.0f} MiB, device "
-                        f"has {spec.ram_bytes/2**20:.0f} MiB")
-        return None
-
-    def _state_bytes(self, svc: str) -> float:
-        info = self.services_info[svc]
-        return info.buffer_budget * self.cfg.state_bytes_per_record
-
-    def _origin_site(self, f: _OFire, origin: Optional[str]) -> str:
-        if origin is None:
-            return self.cfg.fleet.farm_site(self.services_info[f.svc].queue)
-        return self._plans[f.epoch].site(origin)
-
-    def _avail(self, svc: str, ts: float) -> float:
-        t = 0.0
-        for t_mig, ready in self._stalls.get(svc, ()):
-            if t_mig <= ts:
-                t = max(t, ready)
-        return t
-
-    # ----------------------------------------------------------- resolution
-    def _deps_settled(self, f: _OFire) -> bool:
-        for u in self.topology[f.svc]:
-            k = bisect.bisect_left(self._ts[u], f.ts)
-            arr = self._fires[u]
-            p = self._term[u]
-            while p < len(arr) and arr[p].terminal:
-                p += 1
-            self._term[u] = p
-            if p < k:
-                return False
-        return True
-
-    def _result_arrival(self, g: _OFire, dst: str) -> float:
-        src = g.site
-        if src == dst or dst == SITE_DC:
-            # same site, or the result ships with the DC consumer's
-            # record uplink (edge upstream) / never left the DC
-            return g.ready_out
-        if src == SITE_DC:
-            return g.ready_out + self._fleet.downlink_time(dst)
-        if dst not in g.arrival_at:
-            g.arrival_at[dst] = self._fleet.ship_result(src, dst, g.ready_out)
-        return g.arrival_at[dst]
-
-    def _dep_time(self, f: _OFire, dst: str) -> float:
-        t = f.ts
-        for u in self.topology[f.svc]:
-            k = bisect.bisect_left(self._ts[u], f.ts)
-            for g in self._fires[u][:k]:
-                if g.state == "done" and g.ready_out is not None:
-                    t = max(t, self._result_arrival(g, dst))
-        return t
-
-    def _ship_inputs(self, f: _OFire, base: float) -> float:
-        """Haul this fire's newly covered records that live on a
-        different site than the fire executes on; DC-origin results
-        arrive via the result hop instead (no re-ship)."""
-        groups: Dict[str, int] = {}
-        for o, c in f.origins.items():
-            so = self._origin_site(f, o)
-            if so == f.site or so == SITE_DC or c == 0:
-                continue
-            groups[so] = groups.get(so, 0) + c
-        t = base
-        for so in sorted(groups):
-            t = max(t, self._fleet.ship_records(so, f.site, groups[so], base))
-        return t
-
-    def _make_task(self, f: _OFire, arrival: float) -> Task:
-        p = self._plans[f.epoch].placement(f.svc)
-        prof = self.profiles[f.svc]
-        shift = ((arrival - f.ts)
-                 + self._fleet.downlink_time(self.cfg.fleet.result_site))
-        steps = max(1, math.ceil(f.n_window / self.cfg.records_per_step))
-        tt = TaskType(f"svc:{f.svc}", "window", allowable_chips=(p.chips,))
-        task = Task(tid=self._next_tid, ttype=tt, steps=steps,
-                    arrival=arrival, value=prof.slo.value_spec(shift),
-                    hbm_bytes=self.cost.hbm_bytes(f"svc:{f.svc}", "window"))
-        task.dvfs_hint = p.dvfs_f
-        self._next_tid += 1
-        return task
-
-    def _dispatch(self, limit_ts: float) -> bool:
-        """Dispatch every currently-dispatchable fire in global
-        (ts, topo-rank) order — one at a time, so shared-uplink FIFO
-        admissions happen in causal time order rather than per-service
-        sweep order (a service must not reserve the pipe for a *future*
-        haul ahead of another service's earlier transfer)."""
-        progressed = False
-        while True:
-            best: Optional[_OFire] = None
-            for svc in self.order:
-                i = self._disp[svc]
-                arr = self._fires[svc]
-                if i >= len(arr):
-                    continue
-                f = arr[i]
-                if f.ts >= limit_ts or f.epoch >= len(self._plans):
-                    continue
-                if not self._deps_settled(f):
-                    continue
-                if best is None or (f.ts, self.rank[f.svc]) < (best.ts,
-                                                               self.rank[best.svc]):
-                    best = f
-            if best is None:
-                return progressed
-            f = best
-            svc, i = f.svc, f.idx
-            f.site = self._plans[f.epoch].site(svc)
-            base = max(self._dep_time(f, f.site), self._avail(svc, f.ts))
-            in_ready = self._ship_inputs(f, base)
-            if f.site == SITE_DC:
-                task = self._make_task(f, in_ready)
-                self._sim.inject(task)
-                f.state = "inflight"
-                self._waiting[(svc, i)] = task
-                self._task_by_key[(svc, i)] = task
-            else:
-                f.start = in_ready
-                f.state = "queued"
-                heapq.heappush(self._equeue,
-                               (in_ready, f.ts, self.rank[svc],
-                                f.site, svc, i))
-            self._disp[svc] = i + 1
-            progressed = True
-
-    def _next_fire_ts(self, limit_ts: float) -> Optional[float]:
-        """Timestamp of the earliest not-yet-dispatched fire below
-        ``limit_ts`` (dispatchable or not — its ts is still a time the
-        cursor must visit)."""
-        out: Optional[float] = None
-        for svc in self.order:
-            i = self._disp[svc]
-            if i >= len(self._fires[svc]):
-                continue
-            ts = self._fires[svc][i].ts
-            if ts < limit_ts and (out is None or ts < out):
-                out = ts
-        return out
-
-    def _exec_edge_one(self, max_ready: float = float("inf")) -> bool:
-        """Execute the queued edge fire with the smallest readiness, but
-        only once the time cursor has reached it — executing a far-future
-        fire early would occupy the serial device out of order."""
-        if not self._equeue or self._equeue[0][0] > max_ready:
-            return False
-        in_ready, _, _, site, svc, i = heapq.heappop(self._equeue)
-        f = self._fires[svc][i]
-        prof = self.profiles[svc]
-        ex = self._fleet.site(site).execute_fire(in_ready, f.n_window,
-                                                 prof.flops_per_record)
-        f.start, f.ready_out, f.energy_j = ex.start, ex.finish, ex.energy_j
-        f.state = "done"
-        return True
-
-    def _collect_dc(self) -> bool:
-        progressed = False
-        for (svc, i), task in list(self._waiting.items()):
-            f = self._fires[svc][i]
-            if task.dropped:
-                f.state, f.dropped = "failed", True
-            elif (task.finish is not None
-                  and task.finish <= self._sim.now + _EPS):
-                f.state = "done"
-                f.ready_out = task.finish
-                # the completed aggregate surfaces at the user's site
-                self._fleet.site(self.cfg.fleet.result_site).net.downlink(1)
-            else:
-                continue
-            del self._waiting[(svc, i)]
-            progressed = True
-        return progressed
-
-    def _starve_waiting(self) -> bool:
-        """Event heap is empty and tasks are still pending: nothing will
-        ever schedule them (no event retriggers the heuristic). Withdraw
-        and classify exactly like the one-shot co-sim's drain tail."""
-        if not self._waiting:
-            return False
-        now = self._sim.now
-        progressed = False
-        for (svc, i), task in list(self._waiting.items()):
-            if not self._sim.withdraw(task):
-                continue    # actually scheduled: its completion event
-                # is still in flight, let the advance loop collect it
-            progressed = True
-            f = self._fires[svc][i]
-            chips = task.ttype.allowable_chips[0]
-            fh = getattr(task, "dvfs_hint", 1.0)
-            dur = task.steps * self.cost.time_per_step(
-                task.ttype.arch, task.ttype.shape, chips, fh)
-            energy = task.steps * self.cost.energy_per_step(
-                task.ttype.arch, task.ttype.shape, chips, fh)
-            v = task_value(task.value, (now - task.arrival) + dur, energy)
-            f.state = "failed"
-            f.pending = v > 0          # horizon starvation, not decay
-            f.dropped = not f.pending
-            del self._waiting[(svc, i)]
-        return progressed
-
-    def _advance(self, t_from: float, t_to: float) -> None:
-        """Co-advance the fire graph, the edge devices and the DES from
-        ``t_from`` to ``t_to`` behind one global time cursor: fires
-        dispatch when the cursor reaches their timestamp, queued edge
-        fires execute when it reaches their readiness, DC completions
-        collect as the event heap catches up. The cursor keeps shared-
-        uplink FIFO admissions in causal time order — no transfer may
-        reserve the pipe for a haul the simulation hasn't reached."""
-        cursor = t_from
-        while True:
-            p = self._dispatch(limit_ts=cursor + _EPS)
-            if self._exec_edge_one(max_ready=cursor + _EPS):
-                p = True
-            if self._collect_dc():
-                p = True
-            if p:
-                continue
-            ne = self._sim.next_event_time()
-            if ne is not None and ne <= self._sim.now + _EPS:
-                # late injections land at the current instant — process
-                # them before deciding the clock is stuck
-                self._sim.run_until(self._sim.now)
-                continue
-            nxt: List[float] = []
-            nf = self._next_fire_ts(t_to)
-            if nf is not None:
-                nxt.append(nf)
-            if self._equeue:
-                nxt.append(self._equeue[0][0])
-            if ne is not None:
-                nxt.append(ne)
-            # only strictly-future times can advance the cursor (a fire
-            # at the cursor that didn't dispatch is blocked on something
-            # later; its timestamp must not pin the loop)
-            nxt = [t for t in nxt if cursor + _EPS < t <= t_to]
-            if not nxt:
-                return
-            cursor = min(nxt)
-            self._sim.run_until(cursor)
-
-    # ------------------------------------------------------------------ run
-    def run(self, controller) -> OnlineResult:
-        pipe, staps, qtaps = self._ensure_driven()
-        cfg = self.cfg
-        self._fleet = Fleet(cfg.fleet, self.outages)
-        self._sim = Simulator(_fresh_heuristic(cfg.heuristic), self.cost,
-                              power_cap_w=cfg.power_cap_w,
-                              grid=PodGrid(*cfg.grid_shape))
-        self._sim.begin()
-        self._fires = {
-            svc: [_OFire(svc=svc, idx=i, ts=fr.ts,
-                         epoch=self._epoch_of(fr.ts), n_window=fr.n_window,
-                         n_new=fr.n_new, origins=fr.origins)
-                  for i, fr in enumerate(staps[svc].fires)]
-            for svc in self.order}
-        self._ts = {s: [f.ts for f in fl] for s, fl in self._fires.items()}
-        self._term = {s: 0 for s in self.order}
-        self._disp = {s: 0 for s in self.order}
-        self._equeue: List[Tuple] = []
-        self._waiting: Dict[Tuple[str, int], Task] = {}
-        self._task_by_key: Dict[Tuple[str, int], Task] = {}
-        self._stalls: Dict[str, List[Tuple[float, float]]] = {}
-        self._plans: List[PlacementPlan] = []
-        self._next_tid = 0
-        true_rates = self.true_epoch_rates()
-        charge = getattr(controller, "charge_migrations", True)
-        bind = getattr(controller, "bind", None)
-        if bind is not None:
-            bind(self.info())
-
-        epoch_meta: List[Dict] = []
-        n_migs = 0
-        rates_window: List[Dict[str, float]] = []
-        for k, (t0, t1) in enumerate(self.epochs):
-            obs = EpochObservation(
-                epoch=k, t0=t0, t1=t1,
-                rates_window=list(rates_window),
-                down_now={s: self._fleet.site(s).failed_at(t0)
-                          for s in cfg.fleet.site_names},
-                rates_oracle=dict(true_rates[k]),
-                down_oracle={s: any(d < t1 and u > t0
-                                    for d, u in self._fleet.site(s).outages)
-                             for s in cfg.fleet.site_names})
-            plan = controller.decide(obs)
-            plan.validate(self.topology,
-                          grid_chips=cfg.grid_shape[0] * cfg.grid_shape[1],
-                          sites=self.all_sites)
-            bad = self._site_ram_ok(plan)
-            if bad is not None:
-                raise ValueError(f"epoch {k}: infeasible plan from "
-                                 f"{type(controller).__name__}: {bad}")
-            migs: List[ServiceMigration] = []
-            if self._plans:
-                def _xfer(src: str, dst: str, nbytes: float,
-                          _t0: float = t0) -> float:
-                    if not charge:
-                        return 0.0
-                    return self._fleet.ship_state(src, dst, nbytes, _t0) - _t0
-                migs = plan_replacement(self._plans[-1].assignments,
-                                        plan.assignments,
-                                        self._state_bytes, _xfer,
-                                        warmup_s=cfg.migration_warmup_s)
-                if charge:
-                    for m in migs:
-                        self._stalls.setdefault(m.service, []).append(
-                            (t0, t0 + m.stall_s))
-            n_migs += len(migs)
-            self._plans.append(plan)
-
-            self._advance(t0, t1)
-            self._sim.run_until(t1)
-            self._collect_dc()
-            rates_window.append(dict(true_rates[k]))
-            epoch_meta.append({
-                "epoch": k, "t0": t0, "t1": t1, "plan": plan.label,
-                "migrations": [
-                    {"service": m.service, "src": m.src, "dst": m.dst,
-                     "stall_s": round(m.stall_s, 3)} for m in migs],
-            })
-
-        # ---- final sweep: drain cross-epoch stragglers -------------------
-        while True:
-            self._advance(self.epochs[-1][1], float("inf"))
-            if not self._starve_waiting():
-                break
-        self._sim.drain()
-        self._collect_dc()      # safety: completions the loop never saw
-        sim_result = self._sim.finalize()
-
-        return self._score(pipe, staps, qtaps, sim_result, epoch_meta,
-                           n_migs, controller)
-
-    # -------------------------------------------------------------- scoring
-    def _score(self, pipe, staps, qtaps, sim_result: SimResult,
-               epoch_meta: List[Dict], n_migs: int,
-               controller) -> OnlineResult:
-        cfg = self.cfg
-        dl_user = self._fleet.downlink_time(cfg.fleet.result_site)
-        task_by_key = self._task_by_key
-        vos = max_vos = 0.0
-        latencies: List[float] = []
-        completed = dropped = inflight = 0
-        ep_vos = [0.0] * len(self.epochs)
-        for svc in self.order:
-            prof = self.profiles[svc]
-            spec = prof.slo.value_spec()
-            for f in self._fires[svc]:
-                max_vos += prof.slo.max_value
-                if f.state == "done" and f.site != SITE_DC:
-                    lat = f.ready_out - f.ts
-                    f.value = task_value(spec, lat, f.energy_j)
-                    completed += 1
-                    latencies.append(lat)
-                elif f.state == "done":
-                    task = task_by_key[(svc, f.idx)]
-                    f.value = task.earned
-                    completed += 1
-                    latencies.append(f.ready_out + dl_user - f.ts)
-                elif f.dropped:
-                    dropped += 1
-                else:
-                    inflight += 1
-                ep_vos[f.epoch] += f.value
-                vos += f.value
-        for k, meta in enumerate(epoch_meta):
-            meta["vos"] = round(ep_vos[k], 4)
-
-        ledger, per_site = self._ledger(pipe, staps, qtaps)
-        lat = (np.asarray(latencies) if latencies
-               else np.asarray([float("nan")]))
-        return OnlineResult(
-            label=getattr(controller, "label", type(controller).__name__),
-            vos=vos, vos_normalized=vos / max(max_vos, 1e-6),
-            fires_total=sum(len(fl) for fl in self._fires.values()),
-            fires_completed=completed, fires_dropped=dropped,
-            fires_inflight=inflight,
-            latency_p50=float(np.percentile(lat, 50)),
-            latency_p95=float(np.percentile(lat, 95)),
-            latency_p99=float(np.percentile(lat, 99)),
-            edge_energy_j=self._fleet.edge_energy_j,
-            network_energy_j=self._fleet.network_energy_j,
-            dc_energy_j=sim_result.total_energy_j,
-            bytes_up=self._fleet.bytes_up, bytes_down=self._fleet.bytes_down,
-            uplink_wait_s=self._fleet.uplink.queue_wait_s,
-            uplink_transfers=self._fleet.uplink.transfers,
-            migrations=n_migs, ledger=ledger, per_site=per_site,
-            epochs=epoch_meta, dc=sim_result)
-
-    def _ledger(self, pipe: Pipeline, staps, qtaps
-                ) -> Tuple[RecordLedger, Dict[str, Dict]]:
-        ledger = RecordLedger()
-        site_processed: Dict[str, int] = {s: 0
-                                          for s in self.cfg.fleet.site_names}
-        site_processed[SITE_DC] = 0
-        for svc_obj in pipe.services:
-            name = svc_obj.cfg.name
-            tap, qtap = staps[name], qtaps[name]
-            fetched = qtap.fetched.get(name, {})
-            covered = tap.covered
-            buf_ids = {id(r) for r in svc_obj.buffer}
-            drop_ids = {id(r) for r in qtap.drop_refs}
-            sl = ServiceLedger(service=name, queue=svc_obj.cfg.queue)
-            sl.produced = len(qtap.pub_refs)
-            sl.overflow = len(drop_ids - set(fetched))
-            sl.unread = sum(1 for r in svc_obj.q.buf if id(r) not in fetched)
-            sl.fetched = len(fetched)
-            sl.buffered = len(buf_ids - set(covered))
-            evicted_unc = set(fetched) - buf_ids - set(covered)
-            if svc_obj.cfg.store is not None:
-                sl.evicted_stored = len(evicted_unc)
-            else:
-                sl.evicted_lost = len(evicted_unc)
-            for f in self._fires[name]:
-                if f.state == "done" and f.site != SITE_DC:
-                    sl.processed_edge += f.n_new
-                    site_processed[f.site] += f.n_new
-                elif f.state == "done":
-                    sl.processed_dc += f.n_new
-                    site_processed[SITE_DC] += f.n_new
-                elif f.dropped:
-                    sl.dropped_dc += f.n_new
-                else:
-                    sl.inflight_dc += f.n_new
-            ledger.services[name] = sl
-        per_site = self._fleet.per_site_energy()
-        for s, n in site_processed.items():
-            per_site.setdefault(s, {})["records_processed"] = n
-        return ledger, per_site
+FleetCoSimulator = ScenarioEngine
+OnlineConfig = EngineConfig
+OnlineResult = EngineResult

@@ -1,25 +1,48 @@
 """Edge↔DC placement engine (JITA4DS bridge, arXiv:2108.02558 direction).
 
 Models edge devices and the edge↔DC network, expresses per-service
-placement plans over a pipeline DAG, co-simulates stream pipelines whose
-DC-placed services are offloaded onto just-in-time composed VDCs, and
-searches for SLO-optimal placements:
+placement plans over a pipeline DAG, and searches for SLO-optimal
+placements. Co-simulation itself lives in the unified Scenario API
+(``repro.scenario``); the ``cosim`` module here is a deprecation shim
+over it:
 
   edge.py     EdgeNode — gateway-class device, serial fire execution
   network.py  NetworkModel — uplink/downlink transfer time + energy
   plan.py     PlacementPlan — per-service edge|dc + VDC chips/DVFS hints
-  cosim.py    CoSimulator — pipeline × JITA-4DS Simulator co-simulation
+  cosim.py    DEPRECATED CoSimulator shim → repro.scenario.engine
   search.py   exhaustive / greedy+hill-climb VoS-optimal placement search
+
+The co-sim names (``CoSimulator``, ``CoSimResult``, ``ServiceProfile``,
+...) resolve lazily so the shim's import of ``repro.scenario`` cannot
+cycle back through this package's eager imports.
 """
 from repro.placement.edge import EdgeNode, EdgeSpec, FireExec
 from repro.placement.network import LinkSpec, NetworkModel
 from repro.placement.plan import (PlacementPlan, ServicePlacement,
                                   SITE_DC, SITE_EDGE, enumerate_plans,
                                   service_options)
-from repro.placement.cosim import (CoSimConfig, CoSimResult, CoSimulator,
-                                   RecordLedger, ServiceLedger,
-                                   ServiceProfile, ServiceSLO,
-                                   analytics_cost_model)
-from repro.placement.search import (Evaluator, SearchResult,
-                                    exhaustive_search, greedy_search,
-                                    search_placement)
+
+_COSIM_NAMES = ("CoSimConfig", "CoSimResult", "CoSimulator",
+                "RecordLedger", "ServiceLedger", "ServiceProfile",
+                "ServiceSLO", "analytics_cost_model")
+_SEARCH_NAMES = ("Evaluator", "SearchResult", "exhaustive_search",
+                 "greedy_search", "search_placement")
+
+__all__ = ["EdgeNode", "EdgeSpec", "FireExec", "LinkSpec", "NetworkModel",
+           "PlacementPlan", "ServicePlacement", "SITE_DC", "SITE_EDGE",
+           "enumerate_plans", "service_options",
+           *_COSIM_NAMES, *_SEARCH_NAMES]
+
+
+def __getattr__(name):
+    if name in _COSIM_NAMES:
+        from repro.placement import cosim
+        return getattr(cosim, name)
+    if name in _SEARCH_NAMES:
+        from repro.placement import search
+        return getattr(search, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,114 +1,55 @@
-"""Edge↔DC co-simulator: one placement plan, one end-to-end run.
+"""DEPRECATED shim — the single-site co-simulator now runs on the
+unified DES-bridged engine (``repro.scenario.engine``).
 
-Bridges the repo's two halves. The functional dataflow always executes
-in-process through the real :class:`~repro.pipeline.composition.Pipeline`
-(brokers, buffers, stores — exact record accounting); the *timing and
-energy* of every service fire are then co-simulated against the chosen
-placement:
+This module used to implement a *two-pass* timing scheme: pass 1
+collected the DC task trace with optimistic completion estimates for
+DC→DC handoffs, pass 2 re-ran the timing with the simulated completion
+times. That estimation path is retired: :class:`CoSimulator` below is a
+thin adapter that submits every DC-placed fire *incrementally* into one
+persistent JITA-4DS :class:`~repro.core.simulator.Simulator` via
+:class:`~repro.scenario.engine.ScenarioEngine` — completions, scheduler
+drops, VDC composition pressure and power-cap contention are
+co-simulated, never estimated, for the single-gateway case exactly as
+for multi-site fleets.
 
-  * edge-placed fires execute on an :class:`~repro.placement.edge.EdgeNode`
-    (serial device, queueing + energy accounting);
-  * DC-placed fires ship their new records over the
-    :class:`~repro.placement.network.NetworkModel`, become
-    :class:`~repro.core.tasks.Task`s whose value curves are the service
-    SLO shifted by the accumulated upstream + transfer delay, and are
-    submitted to the existing JITA-4DS :class:`~repro.core.simulator.
-    Simulator` on a fresh :class:`~repro.core.vdc.PodGrid` — so DC fires
-    contend for VDC composition exactly like any other job, may be
-    queued behind other jobs, or dropped when their value decays to
-    zero.
+New code should use the Scenario API directly::
 
-Network hops are paid at placement cuts only: a DC task's uplink ships
-the newly covered records of *edge* origin (farm records and results of
-edge-placed upstreams; results that a DC-placed upstream produced never
-left the DC), DC→DC handoffs traverse no link, and every completed DC
-fire pays one downlink because its aggregate surfaces edge-side for the
-user — that downlink gates edge-placed consumers and the user-visible
-latency, but not downstream DC compute.
+    from repro.scenario import scenario, ScenarioSpec
+    engine = spec.compile()
+    result = engine.run_plan(plan)        # == CoSimulator(...).run(plan)
 
-Two timing passes run: pass 1 collects the DC task trace using
-optimistic completion estimates for DC→DC handoffs (a pipelined
-submission model); after the DC simulation, pass 2 re-runs the timing
-with the *actual* VDC completion times to produce final end-to-end
-latencies, the edge/network/DC energy split and the Eq. 2 VoS.
-
-Record conservation is tracked per service with exact set partitions:
-every record published into a service's input queue ends up exactly one
-of {queue-overflow, unread, edge-processed, DC-processed, DC-dropped,
-DC-in-flight, buffered, evicted-to-store, evicted-lost}.
+Everything re-exported here (`ServiceSLO`, `ServiceProfile`, the
+ledgers, `analytics_cost_model`, `CoSimResult`) lives in
+``repro.scenario`` now; the names remain importable from this module for
+backward compatibility.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Callable, Dict, Optional, Tuple
 
 from repro import hardware as hw
-from repro.core.costmodel import CellCost, CostModel
-from repro.core.heuristics import HEURISTICS, VPTRHeuristic
-from repro.core.simulator import SimResult, Simulator
-from repro.core.tasks import Task, TaskType
-from repro.core.value import TaskValueSpec, ValueCurve, task_value
-from repro.core.vdc import PodGrid
 from repro.pipeline.composition import Pipeline
-from repro.placement.edge import EdgeNode, EdgeSpec
-from repro.placement.network import LinkSpec, NetworkModel
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
 from repro.placement.plan import PlacementPlan
+from repro.scenario.engine import (CoSimResult, EngineConfig,  # noqa: F401
+                                   HintedVPTR, ScenarioEngine,
+                                   _fresh_heuristic, _infeasible,
+                                   analytics_cost_model, single_site_fleet)
+from repro.scenario.ledger import (FireRec, RecordLedger,  # noqa: F401
+                                   ServiceLedger, _PublisherContext,
+                                   _QueueTap, _ServiceTap, _topo_order)
+from repro.scenario.profiles import ServiceProfile, ServiceSLO  # noqa: F401
 
 _EPS = 1e-6
 
 
-# ---------------------------------------------------------------------------
-# Per-service workload + SLO description
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ServiceSLO:
-    """Fig. 3 value curves for one service's fires: full value while the
-    end-to-end latency (energy) stays under the soft threshold, decaying
-    to zero at the hard threshold."""
-    soft_latency_s: float
-    hard_latency_s: float
-    soft_energy_j: float = 50.0
-    hard_energy_j: float = 500.0
-    gamma: float = 1.0
-    w_p: float = 0.7
-    shape: str = "linear"
-
-    def value_spec(self, shift_s: float = 0.0) -> TaskValueSpec:
-        """SLO as Eq. 1 parameters; `shift_s` moves the latency curve
-        left by the delay already accumulated before DC execution starts,
-        so a DC task's (finish − arrival) is scored on the *end-to-end*
-        deadline. The shifted soft threshold may go negative: a task
-        whose upstream+transfer delay already exceeded the soft deadline
-        starts *inside* the decay ramp (clamping it to ~0 would re-spread
-        the whole decay over the remaining budget and over-credit slow
-        offloads)."""
-        soft = self.soft_latency_s - shift_s
-        hard = max(self.hard_latency_s - shift_s, soft)
-        return TaskValueSpec(
-            gamma=self.gamma, w_p=self.w_p, w_e=1.0 - self.w_p,
-            perf_curve=ValueCurve(1.0, 0.1, soft, hard, self.shape),
-            energy_curve=ValueCurve(1.0, 0.1, self.soft_energy_j,
-                                    self.hard_energy_j, self.shape))
-
-    @property
-    def max_value(self) -> float:
-        return self.gamma * 1.0  # w_p·v_max + w_e·v_max with v_max = 1
-
-
-@dataclasses.dataclass(frozen=True)
-class ServiceProfile:
-    """What one fire of this service costs, plus its SLO."""
-    slo: ServiceSLO
-    flops_per_record: float = 1e3    # operator work per window value
-    bytes_per_record: float = 8.0    # working-set bytes per window value
-
-
 @dataclasses.dataclass
 class CoSimConfig:
+    """Single-gateway engine knobs (legacy surface). ``epoch_s`` here is
+    the *drive* granularity of the functional dataflow — the whole
+    horizon is always one placement epoch."""
     edge: EdgeSpec = dataclasses.field(default_factory=EdgeSpec)
     link: LinkSpec = dataclasses.field(default_factory=LinkSpec)
     horizon_s: float = 600.0
@@ -121,310 +62,10 @@ class CoSimConfig:
     grid_shape: Tuple[int, int] = (hw.POD_X, hw.POD_Y)
 
 
-# ---------------------------------------------------------------------------
-# Record-conservation ledger
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class ServiceLedger:
-    """Exact per-service record accounting (set partitions, not tallies)."""
-    service: str
-    queue: str = ""           # input queue (shared queues fan out)
-    produced: int = 0         # published into the service's input queue
-    overflow: int = 0         # queue capacity drops, never fetched
-    unread: int = 0           # still sitting in the queue
-    fetched: int = 0
-    processed_edge: int = 0   # covered by a fire executed on the edge
-    processed_dc: int = 0     # covered by a fire whose DC task completed
-    dropped_dc: int = 0       # shipped, but the DC scheduler dropped it
-    inflight_dc: int = 0      # shipped, task still pending at the horizon
-    buffered: int = 0         # in the service buffer, not yet covered
-    evicted_stored: int = 0   # spilled to the post-mortem store (retained)
-    evicted_lost: int = 0     # evicted with no store attached
-
-    @property
-    def covered(self) -> int:
-        return (self.processed_edge + self.processed_dc
-                + self.dropped_dc + self.inflight_dc)
-
-    @property
-    def in_flight(self) -> int:
-        return (self.unread + self.buffered + self.inflight_dc
-                + self.evicted_stored)
-
-    @property
-    def dropped(self) -> int:
-        return self.overflow + self.dropped_dc + self.evicted_lost
-
-    def conserved(self) -> bool:
-        return (self.produced == self.overflow + self.unread + self.fetched
-                and self.fetched == self.covered + self.buffered
-                + self.evicted_stored + self.evicted_lost)
-
-
-@dataclasses.dataclass
-class RecordLedger:
-    services: Dict[str, ServiceLedger] = dataclasses.field(default_factory=dict)
-
-    def conserved(self) -> bool:
-        return all(s.conserved() for s in self.services.values())
-
-    def totals(self) -> Dict[str, int]:
-        """Rolled-up counts. Queue-level keys (produced/overflow/unread)
-        are deduplicated per queue so shared queues are not counted once
-        per consumer; the remaining keys are per-consumer deliveries and
-        may legitimately exceed `produced` when a queue fans out."""
-        consumer_keys = ("fetched", "processed_edge", "processed_dc",
-                         "dropped_dc", "inflight_dc", "buffered",
-                         "evicted_stored", "evicted_lost")
-        out = {k: sum(getattr(s, k) for s in self.services.values())
-               for k in consumer_keys}
-        seen = set()
-        for k in ("produced", "overflow", "unread"):
-            out[k] = 0
-        for s in self.services.values():
-            if s.queue in seen:
-                continue
-            seen.add(s.queue)
-            for k in ("produced", "overflow", "unread"):
-                out[k] += getattr(s, k)
-        return out
-
-
-class _PublisherContext:
-    """Which service's fire is currently publishing (None = a producer
-    farm). Lets queue taps attribute each record to its origin, which
-    the uplink model needs to tell edge-origin records from results that
-    never left the DC."""
-    current: Optional[str] = None
-
-
-class _QueueTap:
-    """Instruments one broker queue: identity and origin of every
-    published, dropped and per-consumer fetched record."""
-
-    def __init__(self, q, ctx: _PublisherContext):
-        self.q = q
-        self.pub_refs: List[object] = []
-        self.drop_refs: List[object] = []
-        self.origin: Dict[int, Optional[str]] = {}
-        self.fetched: Dict[str, Dict[int, object]] = {}
-        orig_pub, orig_fetch = q.publish, q.fetch
-
-        def publish(rec):
-            # detect overflow from the queue's own counter (drop-oldest:
-            # the victim is the head snapshotted before the publish)
-            oldest = q.buf[0] if q.buf else None
-            before = q.dropped
-            orig_pub(rec)
-            if q.dropped > before:
-                self.drop_refs.append(oldest)
-            self.pub_refs.append(rec)
-            self.origin[id(rec)] = ctx.current
-
-        def fetch(consumer, max_n=1 << 30):
-            recs = orig_fetch(consumer, max_n)
-            got = self.fetched.setdefault(consumer, {})
-            for r in recs:
-                got[id(r)] = r
-            return recs
-
-        q.publish, q.fetch = publish, fetch
-
-
-@dataclasses.dataclass
-class FireRec:
-    """One recorded service fire."""
-    ts: float
-    n_window: int   # values the operator aggregated (incl. store history)
-    n_new: int      # records newly covered by this fire (first coverage)
-    # n_new split by origin: None = farm/source, else producing service
-    origins: Dict[Optional[str], int] = dataclasses.field(default_factory=dict)
-
-
-class _ServiceTap:
-    """Wraps StreamService.fire to log fires, first-coverage counts and
-    per-origin attribution; marks the service as publisher while its
-    sinks run."""
-
-    def __init__(self, svc, qtap: _QueueTap, ctx: _PublisherContext):
-        self.svc = svc
-        self.fires: List[FireRec] = []
-        self.covered: Dict[int, object] = {}
-        orig_fire = svc.fire
-
-        def fire(now):
-            n_new = 0
-            origins: Dict[Optional[str], int] = {}
-            for r in svc.buffer:
-                if id(r) not in self.covered and r.ts < now:
-                    self.covered[id(r)] = r
-                    n_new += 1
-                    o = qtap.origin.get(id(r))
-                    origins[o] = origins.get(o, 0) + 1
-            prev = ctx.current
-            ctx.current = svc.cfg.name
-            try:
-                res = orig_fire(now)
-            finally:
-                ctx.current = prev
-            self.fires.append(FireRec(ts=now, n_window=res["n"],
-                                      n_new=n_new, origins=origins))
-            return res
-
-        svc.fire = fire
-
-
-# ---------------------------------------------------------------------------
-# Result
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class CoSimResult:
-    plan_label: str
-    feasible: bool
-    vos: float
-    vos_normalized: float
-    fires_total: int
-    fires_completed: int
-    fires_dropped: int       # DC scheduler drops (value decayed to zero)
-    fires_inflight: int      # DC tasks the horizon truncated mid-queue
-    latency_p50: float
-    latency_p95: float
-    latency_p99: float
-    edge_energy_j: float
-    network_energy_j: float
-    dc_energy_j: float
-    bytes_up: float
-    bytes_down: float
-    ledger: RecordLedger = dataclasses.field(default_factory=RecordLedger)
-    dc: Optional[SimResult] = None
-    per_service: Dict[str, Dict] = dataclasses.field(default_factory=dict)
-    infeasible_reason: str = ""
-
-    @property
-    def energy_total_j(self) -> float:
-        return self.edge_energy_j + self.network_energy_j + self.dc_energy_j
-
-    def summary(self) -> Dict:
-        """JSON-safe digest for benchmark output (strict RFC 8259: NaN
-        percentiles of infeasible/fire-less runs become null)."""
-        def _num(x):
-            return None if math.isnan(x) or math.isinf(x) else round(x, 4)
-        return {
-            "plan": self.plan_label,
-            "feasible": self.feasible,
-            "vos": None if not self.feasible else round(self.vos, 4),
-            "vos_normalized": None if not self.feasible
-            else round(self.vos_normalized, 4),
-            "fires": {"total": self.fires_total,
-                      "completed": self.fires_completed,
-                      "dropped": self.fires_dropped,
-                      "inflight": self.fires_inflight},
-            "latency_s": {"p50": _num(self.latency_p50),
-                          "p95": _num(self.latency_p95),
-                          "p99": _num(self.latency_p99)},
-            "energy_j": {"edge": round(self.edge_energy_j, 2),
-                         "network": round(self.network_energy_j, 2),
-                         "dc": round(self.dc_energy_j, 2)},
-            "bytes": {"up": int(self.bytes_up), "down": int(self.bytes_down)},
-            "records": self.ledger.totals(),
-            "infeasible_reason": self.infeasible_reason,
-        }
-
-
-def _infeasible(plan: PlacementPlan, reason: str) -> CoSimResult:
-    return CoSimResult(plan_label=plan.label, feasible=False,
-                       vos=float("-inf"), vos_normalized=float("-inf"),
-                       fires_total=0, fires_completed=0, fires_dropped=0,
-                       fires_inflight=0,
-                       latency_p50=float("nan"), latency_p95=float("nan"),
-                       latency_p99=float("nan"), edge_energy_j=0.0,
-                       network_energy_j=0.0, dc_energy_j=0.0,
-                       bytes_up=0.0, bytes_down=0.0,
-                       infeasible_reason=reason)
-
-
-# ---------------------------------------------------------------------------
-# DC-side glue: analytics cost cells + hint-honouring heuristic
-# ---------------------------------------------------------------------------
-def analytics_cost_model(profiles: Dict[str, ServiceProfile],
-                         cfg: CoSimConfig) -> CostModel:
-    """One roofline cell per service: a DC task step processes
-    ``records_per_step`` window values of that service's operator. The
-    collective term models the VDC composition / kernel-launch floor, so
-    tiny windows don't pretend to finish in nanoseconds."""
-    cells = {}
-    ref = 256
-    for name, prof in profiles.items():
-        r = cfg.records_per_step
-        t_c = (r * prof.flops_per_record
-               / (ref * hw.PEAK_FLOPS_BF16 * cfg.mxu_efficiency))
-        t_m = r * prof.bytes_per_record / (ref * hw.HBM_BW)
-        cells[(f"svc:{name}", "window")] = CellCost(
-            t_c, t_m, cfg.dc_step_floor_s, r * prof.bytes_per_record)
-    return CostModel(cells)
-
-
-class HintedVPTR(VPTRHeuristic):
-    """VPTR that honours the placement plan's per-task DVFS hint."""
-    name = "VPTR-hint"
-    can_scale_f = True
-
-    def _freqs(self, task, headroom_fn):
-        return (getattr(task, "dvfs_hint", 1.0),)
-
-
-def _fresh_heuristic(name: str):
-    if name == "hinted":
-        return HintedVPTR()
-    return type(HEURISTICS[name])()
-
-
-# ---------------------------------------------------------------------------
-# Fire-level timing graph
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class _Fire:
-    svc: str
-    idx: int
-    ts: float
-    n_window: int
-    n_new: int
-    site: str = "edge"
-    origins: Dict[Optional[str], int] = dataclasses.field(default_factory=dict)
-    ready_out: Optional[float] = None   # result availability (None = never)
-    start: float = 0.0
-    energy_j: float = 0.0
-    value: float = 0.0
-    dropped: bool = False    # DC scheduler dropped the task (value decayed)
-    pending: bool = False    # task still queued/running at the horizon
-
-
-def _topo_order(topology: Dict[str, List[str]],
-                insertion: Sequence[str]) -> List[str]:
-    """Kahn's algorithm, stable w.r.t. pipeline insertion order."""
-    for n, ups in topology.items():
-        for u in ups:
-            if u not in topology:
-                raise ValueError(
-                    f"upstream {u!r} of {n!r} was connect()ed but never "
-                    "add_service()d to the pipeline")
-    indeg = {n: len(ups) for n, ups in topology.items()}
-    order, ready = [], [n for n in insertion if indeg[n] == 0]
-    while ready:
-        n = ready.pop(0)
-        order.append(n)
-        for m in insertion:
-            if n in topology[m]:
-                indeg[m] -= topology[m].count(n)
-                if indeg[m] == 0 and m not in order and m not in ready:
-                    ready.append(m)
-    if len(order) != len(topology):
-        raise ValueError("pipeline topology has a cycle")
-    return order
-
-
 class CoSimulator:
-    """Evaluates placement plans for one pipeline scenario.
+    """DEPRECATED: evaluates placement plans for one single-gateway
+    pipeline scenario by delegating to the unified
+    :class:`~repro.scenario.engine.ScenarioEngine`.
 
     ``build`` must return a *fresh* Pipeline (broker, farms, services,
     connections) on every call. The functional dataflow is driven once
@@ -436,377 +77,58 @@ class CoSimulator:
     edge/link/heuristic fields may be swapped between runs.
     """
 
+    # cfg fields baked into the cached drive / cost cells at construction
+    _FROZEN = ("horizon_s", "epoch_s", "records_per_step",
+               "dc_step_floor_s", "mxu_efficiency")
+
     def __init__(self, build: Callable[[], Pipeline],
                  profiles: Dict[str, ServiceProfile],
                  cfg: Optional[CoSimConfig] = None):
         self.build = build
         self.profiles = dict(profiles)
         self.cfg = cfg or CoSimConfig()
-        pipe = build()
-        self.topology = pipe.topology()
-        self.service_names = [s.cfg.name for s in pipe.services]
-        if len(set(self.service_names)) != len(self.service_names):
-            raise ValueError("duplicate service names in pipeline: "
-                             f"{self.service_names} — co-sim accounting is "
-                             "keyed by name")
-        missing = set(self.topology) - set(self.profiles)
-        if missing:
-            raise ValueError(f"no ServiceProfile for {sorted(missing)}")
-        # plan-independent state, computed once (snapshot the cfg fields
-        # the cost cells bake in, so later cfg mutation can't desync the
-        # step count from the per-step time model)
-        self.order = _topo_order(self.topology, self.service_names)
-        self.rank = {s: i for i, s in enumerate(self.order)}
-        self.cost = analytics_cost_model(self.profiles, self.cfg)
-        self._records_per_step = self.cfg.records_per_step
-        # The functional dataflow is plan-independent, so it is driven
-        # once (lazily, reusing the pipeline built above) and shared
-        # across every plan evaluation; only the timing/placement state
-        # is rebuilt per run().
-        self._fresh_pipe: Optional[Pipeline] = pipe
-        self._driven: Optional[Tuple[Pipeline, Dict[str, _ServiceTap],
-                                     Dict[str, _QueueTap]]] = None
+        self._frozen = {k: getattr(self.cfg, k) for k in self._FROZEN}
+        self._engine = ScenarioEngine(build, self.profiles,
+                                      self._engine_config())
+        self.topology = self._engine.topology
+        self.service_names = list(self._engine.order)
+        self.order = self._engine.order
+        self.rank = self._engine.rank
+        self.cost = self._engine.cost
 
-    def _ensure_driven(self) -> Tuple[Pipeline, Dict[str, "_ServiceTap"],
-                                      Dict[str, "_QueueTap"]]:
-        if self._driven is None:
-            pipe, self._fresh_pipe = self._fresh_pipe or self.build(), None
-            staps, qtaps = self._drive(pipe)
-            self._driven = (pipe, staps, qtaps)
-        return self._driven
-
-    # -------------------------------------------------------------- driving
-    def _drive(self, pipe: Pipeline
-               ) -> Tuple[Dict[str, _ServiceTap], Dict[str, _QueueTap]]:
+    def _engine_config(self) -> EngineConfig:
         cfg = self.cfg
-        ctx = _PublisherContext()
-        qtaps: Dict[int, _QueueTap] = {}
-        for s in pipe.services:
-            if id(s.q) not in qtaps:
-                qtaps[id(s.q)] = _QueueTap(s.q, ctx)
-        staps = {s.cfg.name: _ServiceTap(s, qtaps[id(s.q)], ctx)
-                 for s in pipe.services}
-        by_service = {s.cfg.name: qtaps[id(s.q)] for s in pipe.services}
-        epoch = cfg.epoch_s or min(s.cfg.window.slide_s for s in pipe.services)
-        t, horizon = 0.0, cfg.horizon_s
-        while t < horizon - _EPS:
-            t = min(t + epoch, horizon)
-            pipe.advance_to(t)
-        return staps, by_service
+        return EngineConfig(
+            fleet=single_site_fleet(cfg.edge, cfg.link),
+            horizon_s=cfg.horizon_s, epoch_s=None,
+            drive_step_s=cfg.epoch_s, heuristic=cfg.heuristic,
+            power_cap_w=cfg.power_cap_w,
+            records_per_step=cfg.records_per_step,
+            dc_step_floor_s=cfg.dc_step_floor_s,
+            mxu_efficiency=cfg.mxu_efficiency, grid_shape=cfg.grid_shape)
 
-    # ------------------------------------------------------------- plumbing
-    def _edge_ram_needed(self, pipe: Pipeline, plan: PlacementPlan) -> float:
-        return self.cfg.edge.ram_required(
-            sum(s.cfg.buffer_budget for s in pipe.services
-                if plan.is_edge(s.cfg.name)))
+    def _sync_engine(self) -> ScenarioEngine:
+        """Refresh the swappable cfg fields (edge/link/heuristic/power
+        cap) on the long-lived engine; the cached functional drive and
+        cost cells are untouched — they don't depend on them. Mutating a
+        drive/cost-shaping field after construction fails loudly instead
+        of silently simulating the stale value."""
+        stale = {k: (self._frozen[k], getattr(self.cfg, k))
+                 for k in self._FROZEN
+                 if getattr(self.cfg, k) != self._frozen[k]}
+        if stale:
+            raise ValueError(
+                "CoSimulator cfg fields baked in at construction were "
+                f"mutated (old -> new): {stale}; build a new CoSimulator "
+                "(or use the Scenario API: dataclasses.replace(spec, ...)"
+                ".compile())")
+        e = self._engine
+        ecfg = e.cfg
+        ecfg.fleet = single_site_fleet(self.cfg.edge, self.cfg.link)
+        ecfg.heuristic = self.cfg.heuristic
+        ecfg.power_cap_w = self.cfg.power_cap_w
+        ecfg.grid_shape = self.cfg.grid_shape
+        return e
 
-    @staticmethod
-    def _uplink_records(plan: PlacementPlan, f: "_Fire") -> int:
-        """Records a DC-placed fire must ship edge→DC: exactly the newly
-        covered records of edge origin (farm records and results of
-        edge-placed upstreams); results a DC-placed upstream produced
-        never left the DC."""
-        return sum(c for o, c in f.origins.items()
-                   if o is None or plan.is_edge(o))
-
-    # ---------------------------------------------------------- timing pass
-    def _timing_pass(self, plan: PlacementPlan,
-                     fires: Dict[str, List[_Fire]],
-                     dc_ready: Optional[Dict[Tuple[str, int],
-                                             Tuple[str, Optional[float]]]],
-                     ) -> Tuple[EdgeNode, NetworkModel, List[Task],
-                                Dict[int, Tuple[str, int]]]:
-        """One pass over the fire DAG in readiness order.
-
-        With ``dc_ready is None`` (pass 1) DC fires resolve to optimistic
-        completion estimates and the DC task trace is collected; with the
-        post-simulation status map (pass 2) they resolve to actual
-        completions — ("done", finish) | ("dropped", None) for scheduler
-        drops | ("pending", None) for tasks the horizon truncated."""
-        cfg = self.cfg
-        rank, cost = self.rank, self.cost
-        edge = EdgeNode(cfg.edge)
-        net = NetworkModel(cfg.link)
-        tasks: List[Task] = []
-        tid_map: Dict[int, Tuple[str, int]] = {}
-        ts_lists = {s: [f.ts for f in fl] for s, fl in fires.items()}
-        done: Dict[str, int] = {s: 0 for s in fires}   # resolved prefix len
-        # pmax[s][j] = max finite ready_out over the resolved prefix
-        # fires[s][:j+1] — lets _dep_ready answer prefix-max queries in
-        # O(1) instead of rescanning every upstream fire (O(F²) overall)
-        pmax: Dict[str, List[float]] = {s: [] for s in fires}
-        pending_edge: List[Tuple[float, float, int, str, int]] = []
-        n_total = sum(len(fl) for fl in fires.values())
-        n_done = 0
-        dl_time = net.downlink_time(1)
-        neg_inf = float("-inf")
-
-        def _mark_done(svc: str, f: "_Fire") -> None:
-            nonlocal n_done
-            prev = pmax[svc][-1] if pmax[svc] else neg_inf
-            val = f.ready_out if f.ready_out is not None else neg_inf
-            pmax[svc].append(max(prev, val))
-            done[svc] += 1
-            n_done += 1
-
-        def _dep_ready(svc: str, ts: float) -> Optional[float]:
-            """Readiness contribution of the upstreams of a fire at `ts`:
-            the fire's window aggregates every upstream result produced
-            strictly before `ts`, so it waits for ALL of them to arrive
-            (a straggler result finishing late gates the fire even when a
-            newer one is already in). A DC upstream's result reaches an
-            edge-placed consumer one downlink later; a DC→DC handoff pays
-            no hop. Dropped upstream fires contribute nothing — their
-            value loss is charged upstream. None while some upstream fire
-            strictly before `ts` is still unresolved."""
-            t = ts
-            edge_here = plan.is_edge(svc)
-            for u in self.topology[svc]:
-                k = bisect.bisect_left(ts_lists[u], ts)
-                if done[u] < k:
-                    return None
-                if k and pmax[u][k - 1] != neg_inf:
-                    hop = (dl_time if edge_here and not plan.is_edge(u)
-                           else 0.0)
-                    t = max(t, pmax[u][k - 1] + hop)
-            return t
-
-        def _resolve_ready() -> None:
-            """Resolve every fire whose dependencies are settled: DC fires
-            immediately, edge fires into the device queue."""
-            nonlocal n_done
-            progress = True
-            while progress:
-                progress = False
-                for svc in fires:
-                    i = done[svc]
-                    while i < len(fires[svc]):
-                        f = fires[svc][i]
-                        if f.site == "edge" and any(
-                                p[3] == svc and p[4] == i
-                                for p in pending_edge):
-                            break  # queued on the device, not finished
-                        in_ready = _dep_ready(svc, f.ts)
-                        if in_ready is None:
-                            break
-                        f.start = in_ready
-                        if f.site == "edge":
-                            pending_edge.append(
-                                (in_ready, f.ts, rank[svc], svc, i))
-                            break
-                        # ---- DC fire ----
-                        # ship only edge-origin records over the uplink
-                        n_ship = self._uplink_records(plan, f)
-                        xfer = net.uplink(n_ship) if n_ship else 0.0
-                        arrival = in_ready + xfer
-                        if dc_ready is None:
-                            # SLO scored on the user-visible result, which
-                            # surfaces edge-side one downlink after finish
-                            shift = (arrival - f.ts) + dl_time
-                            p = plan.placement(svc)
-                            prof = self.profiles[svc]
-                            steps = max(1, math.ceil(
-                                f.n_window / self._records_per_step))
-                            tt = TaskType(f"svc:{svc}", "window",
-                                          allowable_chips=(p.chips,))
-                            task = Task(tid=len(tasks), ttype=tt, steps=steps,
-                                        arrival=arrival,
-                                        value=prof.slo.value_spec(shift),
-                                        hbm_bytes=cost.hbm_bytes(
-                                            f"svc:{svc}", "window"))
-                            task.dvfs_hint = p.dvfs_f
-                            tid_map[task.tid] = (svc, i)
-                            tasks.append(task)
-                            est = steps * cost.time_per_step(
-                                f"svc:{svc}", "window", p.chips, p.dvfs_f)
-                            f.ready_out = arrival + est
-                        else:
-                            status, r = dc_ready.get((svc, i),
-                                                     ("pending", None))
-                            if status == "done":
-                                # ready_out is the in-DC completion; the
-                                # edge-surfacing downlink is charged here
-                                # and added at edge consumers / scoring
-                                f.ready_out = r
-                                net.downlink(1)
-                            else:           # no result ever arrives
-                                f.ready_out = None
-                                f.dropped = status == "dropped"
-                                f.pending = status == "pending"
-                        _mark_done(svc, f)
-                        i = done[svc]
-                        progress = True
-
-        _resolve_ready()
-        while n_done < n_total or pending_edge:
-            if not pending_edge:
-                raise RuntimeError("co-sim deadlock: unresolved fires with "
-                                   "an idle edge device")
-            pending_edge.sort()
-            in_ready, _, _, svc, i = pending_edge.pop(0)
-            f = fires[svc][i]
-            prof = self.profiles[svc]
-            ex = edge.execute_fire(in_ready, f.n_window,
-                                   prof.flops_per_record)
-            f.start, f.ready_out, f.energy_j = ex.start, ex.finish, ex.energy_j
-            _mark_done(svc, f)
-            _resolve_ready()
-        return edge, net, tasks, tid_map
-
-    # ------------------------------------------------------------------ run
     def run(self, plan: PlacementPlan) -> CoSimResult:
-        cfg = self.cfg
-        plan.validate(self.topology,
-                      grid_chips=cfg.grid_shape[0] * cfg.grid_shape[1])
-        pipe, staps, qtaps = self._ensure_driven()
-        ram = self._edge_ram_needed(pipe, plan)
-        if ram > cfg.edge.ram_bytes:
-            return _infeasible(
-                plan, f"edge RAM: need {ram/2**20:.0f} MiB buffer budget, "
-                      f"device has {cfg.edge.ram_bytes/2**20:.0f} MiB")
-        order, cost = self.order, self.cost
-        fires = {s: [_Fire(svc=s, idx=i, ts=fr.ts, n_window=fr.n_window,
-                           n_new=fr.n_new, site=plan.site(s),
-                           origins=fr.origins)
-                     for i, fr in enumerate(staps[s].fires)]
-                 for s in order}
-
-        # pass 1: optimistic DC handoffs → task trace
-        _, _, tasks, tid_map = self._timing_pass(plan, fires, dc_ready=None)
-        for fl in fires.values():       # reset fire state between passes
-            for f in fl:
-                f.ready_out, f.start, f.energy_j = None, 0.0, 0.0
-                f.dropped = f.pending = False
-
-        sim_result: Optional[SimResult] = None
-        dc_ready: Dict[Tuple[str, int], Tuple[str, Optional[float]]] = {}
-        if tasks:
-            grid = PodGrid(*cfg.grid_shape)
-            sim = Simulator(_fresh_heuristic(cfg.heuristic), cost,
-                            power_cap_w=cfg.power_cap_w, grid=grid)
-            trace = sorted(tasks, key=lambda t: (t.arrival, t.tid))
-            sim_result = sim.run(trace)
-            for t in trace:
-                key = tid_map[t.tid]
-                if t.finish is not None and not t.dropped:
-                    dc_ready[key] = ("done", t.finish)
-                elif t.dropped:
-                    dc_ready[key] = ("dropped", None)
-                else:
-                    # still pending when the event loop drained: a task
-                    # whose value is already zero under its own hinted
-                    # config will never run (the simulator's drop check
-                    # is optimistic, f=1.0) — that is a drop, not a
-                    # horizon truncation
-                    chips = t.ttype.allowable_chips[0]
-                    f_hint = getattr(t, "dvfs_hint", 1.0)
-                    dur = t.steps * cost.time_per_step(
-                        t.ttype.arch, t.ttype.shape, chips, f_hint)
-                    energy = t.steps * cost.energy_per_step(
-                        t.ttype.arch, t.ttype.shape, chips, f_hint)
-                    latency = (sim_result.makespan - t.arrival) + dur
-                    v = task_value(t.value, latency, energy)
-                    dc_ready[key] = (("pending", None) if v > 0
-                                     else ("dropped", None))
-
-        # pass 2: actual DC completions → final latencies & energy split
-        edge, net, _, _ = self._timing_pass(plan, fires, dc_ready=dc_ready)
-        dl_time = net.downlink_time(1)   # DC results surface edge-side
-
-        # ---- score fires -------------------------------------------------
-        vos = 0.0
-        max_vos = 0.0
-        latencies: List[float] = []
-        completed = dropped = inflight = 0
-        per_service: Dict[str, Dict] = {}
-        task_by_key = {tid_map[t.tid]: t for t in tasks}
-        for svc in order:
-            prof = self.profiles[svc]
-            spec = prof.slo.value_spec()
-            s_lat: List[float] = []
-            s_done = s_drop = s_wait = 0
-            for f in fires[svc]:
-                max_vos += prof.slo.max_value
-                if f.site == "edge":
-                    lat = f.ready_out - f.ts
-                    f.value = task_value(spec, lat, f.energy_j)
-                    s_done += 1
-                    s_lat.append(lat)
-                elif f.dropped:
-                    f.value = 0.0
-                    s_drop += 1
-                elif f.pending:
-                    f.value = 0.0
-                    s_wait += 1
-                else:
-                    f.value = task_by_key[(svc, f.idx)].earned
-                    s_done += 1
-                    s_lat.append(f.ready_out + dl_time - f.ts)
-            s_vos = sum(f.value for f in fires[svc])
-            vos += s_vos
-            completed += s_done
-            dropped += s_drop
-            inflight += s_wait
-            latencies.extend(s_lat)
-            per_service[svc] = {
-                "site": plan.placement(svc).label,
-                "fires": len(fires[svc]), "completed": s_done,
-                "dropped": s_drop, "inflight": s_wait,
-                "vos": round(s_vos, 4),
-                "latency_p95": round(float(np.percentile(s_lat, 95)), 4)
-                if s_lat else float("nan"),
-            }
-
-        ledger = self._ledger(pipe, plan, staps, qtaps, fires)
-        lat = np.asarray(latencies) if latencies else np.asarray([float("nan")])
-        dc_energy = sim_result.total_energy_j if sim_result else 0.0
-        return CoSimResult(
-            plan_label=plan.label, feasible=True, vos=vos,
-            vos_normalized=vos / max(max_vos, _EPS),
-            fires_total=sum(len(fl) for fl in fires.values()),
-            fires_completed=completed, fires_dropped=dropped,
-            fires_inflight=inflight,
-            latency_p50=float(np.percentile(lat, 50)),
-            latency_p95=float(np.percentile(lat, 95)),
-            latency_p99=float(np.percentile(lat, 99)),
-            edge_energy_j=edge.energy_j, network_energy_j=net.energy_j,
-            dc_energy_j=dc_energy, bytes_up=net.bytes_up,
-            bytes_down=net.bytes_down, ledger=ledger, dc=sim_result,
-            per_service=per_service)
-
-    # ----------------------------------------------------------- accounting
-    def _ledger(self, pipe: Pipeline, plan: PlacementPlan,
-                staps: Dict[str, "_ServiceTap"],
-                qtaps: Dict[str, "_QueueTap"],
-                fires: Dict[str, List[_Fire]]) -> RecordLedger:
-        ledger = RecordLedger()
-        for svc_obj in pipe.services:
-            name = svc_obj.cfg.name
-            tap, qtap = staps[name], qtaps[name]
-            fetched = qtap.fetched.get(name, {})
-            covered = tap.covered
-            buf_ids = {id(r) for r in svc_obj.buffer}
-            drop_ids = {id(r) for r in qtap.drop_refs}
-            sl = ServiceLedger(service=name, queue=svc_obj.cfg.queue)
-            sl.produced = len(qtap.pub_refs)
-            sl.overflow = len(drop_ids - set(fetched))
-            sl.unread = sum(1 for r in svc_obj.q.buf if id(r) not in fetched)
-            sl.fetched = len(fetched)
-            sl.buffered = len(buf_ids - set(covered))
-            evicted_unc = set(fetched) - buf_ids - set(covered)
-            if svc_obj.cfg.store is not None:
-                sl.evicted_stored = len(evicted_unc)
-            else:
-                sl.evicted_lost = len(evicted_unc)
-            # split covered records by fire outcome
-            for f in fires[name]:
-                if f.site == "edge":
-                    sl.processed_edge += f.n_new
-                elif f.dropped:
-                    sl.dropped_dc += f.n_new
-                elif f.pending:         # never finished before the horizon
-                    sl.inflight_dc += f.n_new
-                else:
-                    sl.processed_dc += f.n_new
-            ledger.services[name] = sl
-        return ledger
+        return self._sync_engine().run_plan(plan)

@@ -126,6 +126,19 @@ class PlacementPlan:
                 raise ValueError(f"{n}: dvfs_f must be in (0, 1], "
                                  f"got {p.dvfs_f}")
 
+    # ------------------------------------------------------------- JSON
+    def to_dict(self) -> Dict[str, Dict]:
+        """Structured JSON form (benchmarks record plans this way so
+        regressions can replay them without parsing labels)."""
+        return {n: {"site": p.site, "chips": p.chips, "dvfs_f": p.dvfs_f}
+                for n, p in sorted(self.assignments.items())}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Mapping]) -> "PlacementPlan":
+        return cls({n: ServicePlacement(v["site"], int(v.get("chips", 8)),
+                                        float(v.get("dvfs_f", 1.0)))
+                    for n, v in d.items()})
+
     # -------------------------------------------------------- enumeration
     def with_placement(self, name: str, placement: ServicePlacement
                        ) -> "PlacementPlan":

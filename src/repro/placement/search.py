@@ -33,17 +33,23 @@ class SearchResult:
 
 class Evaluator:
     """Memoized plan evaluation; share one instance between baseline
-    runs and a search to avoid re-co-simulating identical plans."""
+    runs and a search to avoid re-co-simulating identical plans.
+
+    Accepts anything that quacks like a plan scorer: the unified
+    :class:`~repro.scenario.engine.ScenarioEngine` (via ``run_plan``),
+    the deprecated ``CoSimulator`` shim, or an analytic stand-in like
+    the online controller's ``ForecastModel`` (via ``run``)."""
 
     def __init__(self, cosim: CoSimulator):
         self.cosim = cosim
+        self._run = getattr(cosim, "run_plan", None) or cosim.run
         self.cache: Dict[Tuple, CoSimResult] = {}
         self.history: List[Tuple[str, float]] = []
 
     def __call__(self, plan: PlacementPlan) -> CoSimResult:
         key = plan.key()
         if key not in self.cache:
-            res = self.cosim.run(plan)
+            res = self._run(plan)
             self.cache[key] = res
             self.history.append((plan.label, res.vos))
         return self.cache[key]

@@ -1,0 +1,33 @@
+"""Unified Scenario API: one declarative spec → one DES-bridged engine.
+
+The public surface of the co-simulation stack:
+
+  spec.py       ScenarioSpec / scenario() builder — pipeline DAG,
+                per-service profiles, fleet topology, drift schedule,
+                SLO/value specs; JSON round-trip; ``compile()``
+  engine.py     ScenarioEngine — the one co-simulation engine: every
+                DC-placed fire submits incrementally into one
+                persistent JITA-4DS Simulator (event-feed DES bridge);
+                ``run_plan`` for static placements, ``run(controller)``
+                for epoch-based re-placement
+  profiles.py   ServiceSLO / ServiceProfile — the single source of
+                truth for operator cost
+  calibrate.py  KernelCalibrator — measure flops_per_record from Pallas
+                kernel dry-runs instead of declaring it
+  ledger.py     exact record-conservation accounting shared by all runs
+
+Older entry points (``repro.placement.cosim.CoSimulator``,
+``repro.online.des_bridge.FleetCoSimulator``) are thin shims over this
+package.
+"""
+from repro.scenario.profiles import ServiceProfile, ServiceSLO
+from repro.scenario.ledger import RecordLedger, ServiceLedger, FireRec
+from repro.scenario.engine import (BridgeInfo, CoSimResult, EngineConfig,
+                                   EngineResult, EpochObservation,
+                                   ScenarioEngine, ServiceInfo,
+                                   analytics_cost_model, single_site_fleet)
+from repro.scenario.spec import (FarmSpec, RateSpec, ScenarioBuilder,
+                                 ScenarioSpec, ServiceSpec, StoreSpec,
+                                 scenario)
+from repro.scenario.calibrate import (Calibration, KernelCalibrator,
+                                      calibrate_profiles)

@@ -248,6 +248,35 @@ def test_outage_forces_migration_and_recovery():
     assert res2.ledger.totals() == res.ledger.totals()
 
 
+def test_controller_regret_telemetry():
+    """Every OnlineController epoch records forecast-ranked VoS (best
+    plan vs the plan actually played) and the engine merges the realized
+    co-sim VoS + calibration gap into the same record — the forecast-
+    calibration measurement the ROADMAP item needs."""
+    cs = _cosim()
+    ctrl = _online_ctrl()
+    res = cs.run(ctrl)
+    assert len(ctrl.telemetry) == len(cs.epochs)
+    epochs = res.summary()["epochs"]
+    for e in epochs:
+        fc = e["forecast"]
+        assert fc["epoch"] == e["epoch"]
+        assert fc["best_vos"] is not None
+        assert fc["chosen_vos"] is not None
+        # hysteresis can only keep a worse-or-equal forecast plan
+        assert fc["search_regret"] >= 0.0
+        assert fc["best_vos"] >= fc["chosen_vos"] - 1e-9
+        # realized per-epoch VoS merged back by the engine
+        assert fc["cosim_vos"] == e["vos"]
+        assert fc["calibration_gap"] == pytest.approx(
+            fc["chosen_vos"] - e["vos"], abs=1e-3)
+    assert epochs[0]["forecast"]["switched"]      # first epoch adopts
+    # static controllers have no telemetry, and their epochs say so
+    r_static = cs.run(StaticController(
+        PlacementPlan.all_edge(NAMES, site="gw-a")))
+    assert all("forecast" not in e for e in r_static.summary()["epochs"])
+
+
 def test_oracle_is_free_to_switch():
     """The oracle pays no migration stalls and sees true next-epoch
     rates; with identical decisions it can only do at least as well."""

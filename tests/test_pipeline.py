@@ -68,6 +68,76 @@ def test_service_buffer_eviction_spills_to_store():
     assert len(svc.buffer) <= 16 + 1
 
 
+def test_fetch_spill_accounting_is_exact():
+    """Fetch's data-management strategy, pinned record by record: stale
+    records (older than the window) spill first, then budget overflow
+    evicts the oldest in-window records; every eviction increments
+    ``buffer_evictions`` exactly once and lands in the store."""
+    broker = Broker()
+    store = TimeSeriesStore("s", chunk_seconds=1000.0)
+    svc = StreamService(ServiceConfig(
+        name="tiny", queue="q", column="v", agg="sum",
+        window=WindowSpec("sliding", 50.0, 10.0), buffer_budget=16,
+        store=store), broker)
+    q = broker.queue("q")
+    for i in range(100):                       # ts 0..99, one record each
+        q.publish(Record(ts=float(i), values={"v": float(i)}))
+    n = svc.fetch()
+    assert n == 100
+    # horizon = 99 - 50 = 49 → 49 stale (ts 0..48); 51 in-window > 16
+    # budget → 35 more evicted (ts 49..83); buffer keeps ts 84..99
+    assert svc.buffer_evictions == 49 + 35
+    assert [r.ts for r in svc.buffer] == [float(i) for i in range(84, 100)]
+    store.flush()
+    spilled = store.scan(0.0, 84.0, "v")
+    assert len(spilled) == 84                  # all evictions retained
+    np.testing.assert_array_equal(np.sort(spilled), np.arange(84.0))
+    # the operator can still see spilled history through the store
+    res = svc.fire(100.0)
+    assert res["n"] == 50                      # window [50, 100): 34+16
+
+
+def test_fetch_eviction_without_store_loses_records():
+    """Same pressure, no store: the counter still counts, the records
+    are gone (the co-sim ledgers classify these as evicted_lost)."""
+    broker = Broker()
+    svc = StreamService(ServiceConfig(
+        name="lossy", queue="q", column="v", agg="count",
+        window=WindowSpec("sliding", 50.0, 10.0), buffer_budget=16), broker)
+    q = broker.queue("q")
+    for i in range(100):
+        q.publish(Record(ts=float(i), values={"v": 1.0}))
+    svc.fetch()
+    assert svc.buffer_evictions == 84
+    assert len(svc.buffer) == 16
+    res = svc.fire(100.0)
+    assert res["n"] == 16                      # only the buffer survives
+
+
+def test_buffer_evictions_counter_accumulates_across_fetches():
+    """Incremental fetches: the counter is monotone and equals the total
+    number of records ever removed from the buffer, not a per-fetch
+    snapshot; in-window records under budget are never evicted."""
+    broker = Broker()
+    svc = StreamService(ServiceConfig(
+        name="inc", queue="q", column="v", agg="mean",
+        window=WindowSpec("sliding", 1000.0, 10.0), buffer_budget=8), broker)
+    q = broker.queue("q")
+    for i in range(8):                         # fits: no evictions
+        q.publish(Record(ts=float(i), values={"v": 1.0}))
+    svc.fetch()
+    assert svc.buffer_evictions == 0 and len(svc.buffer) == 8
+    for i in range(8, 12):                     # 4 over budget
+        q.publish(Record(ts=float(i), values={"v": 1.0}))
+    svc.fetch()
+    assert svc.buffer_evictions == 4
+    for i in range(12, 14):                    # 2 more
+        q.publish(Record(ts=float(i), values={"v": 1.0}))
+    svc.fetch()
+    assert svc.buffer_evictions == 6
+    assert [r.ts for r in svc.buffer] == [float(i) for i in range(6, 14)]
+
+
 def test_offload_decision_boundary():
     hx = HybridExecutor(edge_budget=1000)
     assert not hx.decide(1000).offload
