@@ -257,6 +257,7 @@ def run_scenario(sc: OnlineScenario, seed: int = 0) -> Dict:
     within_oracle = (r_oracle.vos <= 0.0
                      or r_online.vos >= 0.9 * r_oracle.vos)
     regret = [e.get("forecast", {}) for e in r_online.summary()["epochs"]]
+    searches = [r.get("search") for r in regret if r.get("search")]
     return {
         "spec": sc.spec.to_dict(),
         "statics": statics,
@@ -265,6 +266,12 @@ def run_scenario(sc: OnlineScenario, seed: int = 0) -> Dict:
         "online": r_online.summary(),
         "oracle": r_oracle.summary(),
         "avg_rates": {k: round(v, 3) for k, v in avg_rates.items()},
+        "search_stats": {   # forecast-model plan searches across epochs
+            "epochs": len(searches),
+            "evaluations": sum(s["evaluations"] for s in searches),
+            "cache_hits": sum(s["cache_hits"] for s in searches),
+            "cache_misses": sum(s["cache_misses"] for s in searches),
+        },
         "forecast_regret": {
             "epochs_with_telemetry": sum(1 for r in regret if r),
             "mean_search_regret": round(

@@ -14,8 +14,10 @@ unified DES-bridged engine via ``spec.compile()``):
                      infeasible and the stream must move to the DC.
 
 The searched placement must achieve VoS >= both baselines on at least
-2 of 3 scenarios (it searches a superset of both, so with exhaustive
-search this holds by construction — the bench verifies it end-to-end).
+2 of 3 scenarios (the search runs the two-tier screened path — batch
+numpy screening, exact DES on the top-K survivors plus the baseline
+anchors — so this holds by construction; the bench verifies it
+end-to-end and records the tier stats).
 The report embeds each spec (JSON round-trip checked by scripts/ci.sh)
 and the searched plan in structured form, pinning the engine against
 regressions (tests/test_scenario.py).
@@ -155,10 +157,10 @@ def run_scenario(sc: Scenario, calibrate: bool = False) -> Dict:
         "all_edge": all_edge.summary(),
         "all_dc": all_dc.summary(),
         "searched": searched.summary(),
-        "search": {"method": sr.method, "evaluations": sr.evaluations,
-                   "plan": sr.plan.label,
+        "search": {**sr.stats(), "plan": sr.plan.label,
                    "assignments": sr.plan.to_dict(),
                    "chips_options": list(sc.chips_options)},
+        "evaluator": ev.stats(),
         "searched_beats_baselines": bool(searched.feasible
                                          and searched.vos >= base_best),
         "wall_s": round(dt, 2),

@@ -21,12 +21,14 @@ SURFACE = {
         "EngineConfig", "EngineResult", "CoSimResult", "ServiceProfile",
         "ServiceSLO", "KernelCalibrator", "calibrate_profiles",
         "RecordLedger", "ServiceLedger", "BridgeInfo", "EpochObservation",
-        "analytics_cost_model", "single_site_fleet"),
+        "analytics_cost_model", "single_site_fleet", "ScreeningModel",
+        "ScreenResult"),
     "repro.placement": (
         "EdgeNode", "EdgeSpec", "LinkSpec", "NetworkModel", "PlacementPlan",
         "ServicePlacement", "CoSimConfig", "CoSimResult", "CoSimulator",
         "ServiceProfile", "ServiceSLO", "Evaluator", "search_placement",
-        "exhaustive_search", "greedy_search", "enumerate_plans"),
+        "exhaustive_search", "greedy_search", "screened_search",
+        "enumerate_plans"),
     "repro.online": (
         "Fleet", "FleetSpec", "SiteSpec", "ContendedUplink", "DriftingFarm",
         "FleetCoSimulator", "OnlineConfig", "OnlineResult", "BridgeInfo",

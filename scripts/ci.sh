@@ -27,5 +27,8 @@ fi
 
 if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     echo "== benchmark smoke (scripts/ci.sh; CI_SKIP_BENCH_SMOKE=1 to skip) =="
+    # includes bench_search_perf --smoke, which *asserts* that the
+    # two-tier screened search returns the same best-plan VoS as the
+    # exact-only search (screen-vs-exact agreement gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

@@ -40,8 +40,15 @@ class CellCost:
 
 
 class CostModel:
+    """Cost cells are immutable, so the per-config queries are pure —
+    they are memoized per (arch, shape, chips, f) because the DES hot
+    loop (heuristic assignment + drop scans) issues the same handful of
+    lookups millions of times per co-simulation."""
+
     def __init__(self, cells: Dict[Tuple[str, str], CellCost]):
         self.cells = cells
+        self._time_cache: Dict[Tuple[str, str, int, float], float] = {}
+        self._power_cache: Dict[Tuple[int, float], float] = {}
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -92,12 +99,23 @@ class CostModel:
 
     def time_per_step(self, arch: str, shape: str, chips: int,
                       dvfs_f: float = 1.0) -> float:
-        return self._cell(arch, shape).step_time(chips, dvfs_f)
+        key = (arch, shape, chips, dvfs_f)
+        t = self._time_cache.get(key)
+        if t is None:
+            t = self._cell(arch, shape).step_time(chips, dvfs_f)
+            self._time_cache[key] = t
+        return t
 
     def power_w(self, chips: int, dvfs_f: float = 1.0) -> float:
-        per_chip = hw.CHIP_STATIC_W + (hw.CHIP_TDP_W - hw.CHIP_STATIC_W) * dvfs_f ** 3
-        hosts = max(1, chips // hw.CHIPS_PER_HOST)
-        return chips * per_chip + hosts * hw.HOST_POWER_W
+        key = (chips, dvfs_f)
+        p = self._power_cache.get(key)
+        if p is None:
+            per_chip = (hw.CHIP_STATIC_W
+                        + (hw.CHIP_TDP_W - hw.CHIP_STATIC_W) * dvfs_f ** 3)
+            hosts = max(1, chips // hw.CHIPS_PER_HOST)
+            p = chips * per_chip + hosts * hw.HOST_POWER_W
+            self._power_cache[key] = p
+        return p
 
     def energy_per_step(self, arch: str, shape: str, chips: int,
                         dvfs_f: float = 1.0) -> float:

@@ -59,7 +59,15 @@ class Simulator:
     def begin(self) -> "Simulator":
         """Reset the event loop for incremental feeding."""
         self._events: List[Tuple[float, int, str, object]] = []
-        self._pending: List[Task] = []
+        # pending queue: insertion-ordered, O(1) membership and removal
+        # (keyed by object identity — the one-shot hot loop used to pay
+        # an O(n) list.remove per scheduled task)
+        self._pending: Dict[int, Task] = {}
+        # per-task best-possible memo for _drop_dead: duration and
+        # energy on the largest allowable config never change, so the
+        # cost-model lookups happen once per task instead of once per
+        # pending task per event
+        self._bp: Dict[int, Tuple[float, float]] = {}
         self._seq = 0
         self._vos = self._perf_v = self._energy_v = 0.0
         self._tot_energy = 0.0
@@ -115,7 +123,7 @@ class Simulator:
         self._util_area += self.grid.used_chips * (now - self._now)
         self._now = now
         if kind == "arrive":
-            self._pending.append(payload)
+            self._pending[id(payload)] = payload
         else:  # complete
             task, vdc = payload
             self.grid.release(vdc)
@@ -133,11 +141,13 @@ class Simulator:
 
         self._drop_dead(now)
         for task, chips, f in self.heuristic.assign(
-                self._pending, self.grid, self.cost, now, self.power_cap_w):
+                list(self._pending.values()), self.grid, self.cost, now,
+                self.power_cap_w):
             vdc = self.grid.compose(chips, f, task.tid)
             if vdc is None:
                 continue
-            self._pending.remove(task)
+            del self._pending[id(task)]
+            self._bp.pop(id(task), None)
             t_step = self.cost.time_per_step(task.ttype.arch,
                                              task.ttype.shape, chips, f)
             task.start = now
@@ -150,16 +160,28 @@ class Simulator:
                            (task.finish, self._seq, "complete", (task, vdc)))
 
     def _drop_dead(self, now: float) -> None:
-        alive = []
-        for task in self._pending:
-            best_chips = max(task.ttype.allowable_chips)
-            v, _, _ = _best_possible(task, self.cost, now, best_chips)
-            if v <= 0.0:
-                task.dropped = True
-                self._dropped += 1
-            else:
-                alive.append(task)
-        self._pending[:] = alive
+        dead: List[int] = []
+        for key, task in self._pending.items():
+            memo = self._bp.get(key)
+            if memo is None:
+                best_chips = max(task.ttype.allowable_chips)
+                t_step = self.cost.time_per_step(
+                    task.ttype.arch, task.ttype.shape, best_chips, 1.0)
+                energy = self.cost.energy_per_step(
+                    task.ttype.arch, task.ttype.shape, best_chips,
+                    1.0) * task.steps
+                memo = (t_step * task.steps, energy)
+                self._bp[key] = memo
+            dur, energy = memo
+            if task_value(task.value, (now - task.arrival) + dur,
+                          energy) > 0.0:
+                continue
+            task.dropped = True
+            self._dropped += 1
+            dead.append(key)
+        for key in dead:
+            del self._pending[key]
+            self._bp.pop(key, None)
 
     def finalize(self) -> SimResult:
         """Drain outstanding events and close the books. Tasks still
@@ -181,14 +203,15 @@ class Simulator:
 
     def pending_tasks(self) -> List[Task]:
         """Tasks admitted but not yet scheduled (live view)."""
-        return list(self._pending) if self._begun else []
+        return list(self._pending.values()) if self._begun else []
 
     def withdraw(self, task: Task) -> bool:
         """Cancel an admitted-but-unscheduled task (the feeder gave up on
         it — e.g. a starved offload with no event left to trigger its
         assignment). Counted as dropped."""
-        if self._begun and task in self._pending:
-            self._pending.remove(task)
+        if self._begun and id(task) in self._pending:
+            del self._pending[id(task)]
+            self._bp.pop(id(task), None)
             task.dropped = True
             self._dropped += 1
             return True

@@ -40,6 +40,26 @@ class ValueCurve:
             return self.v_min + (self.v_max - self.v_min) * math.exp(-3 * frac)
         return self.v_max - frac * (self.v_max - self.v_min)
 
+    def value_array(self, x):
+        """Vectorized :meth:`value` over a numpy array (same piecewise
+        shape, kept next to the scalar so the curves cannot drift —
+        the tier-1 plan screen evaluates these over whole fire/plan
+        matrices)."""
+        import numpy as np
+        out = np.zeros(x.shape)
+        out[x <= self.th_soft] = self.v_max
+        mid = (x > self.th_soft) & (x <= self.th_hard)
+        if self.th_hard > self.th_soft:
+            frac = (x[mid] - self.th_soft) / (self.th_hard - self.th_soft)
+            if self.shape == "exponential":
+                out[mid] = (self.v_min
+                            + (self.v_max - self.v_min) * np.exp(-3 * frac))
+            else:
+                out[mid] = self.v_max - frac * (self.v_max - self.v_min)
+        else:
+            out[mid] = self.v_min
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class TaskValueSpec:

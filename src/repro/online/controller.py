@@ -25,8 +25,7 @@ from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
 from repro.scenario.engine import BridgeInfo, EpochObservation
-
-_NEVER_S = 1e9          # latency that zeroes any value curve
+from repro.scenario.screen import q_factor
 
 
 @dataclasses.dataclass
@@ -115,16 +114,10 @@ class ForecastModel:
             wire = self._n_new(s) * net.record_bytes * net.compression
             up_load += wire / net.uplink_bps / i.slide_s
 
-        def q_factor(u: float) -> float:
-            """Deterministic slide-aligned arrivals: a work-conserving
-            server is stable (no queue growth) below saturation, then
-            the backlog diverges. Mild inflation approaching 1, cliff
-            at it."""
-            if u >= 0.95:
-                return _NEVER_S
-            if u <= 0.7:
-                return 1.0
-            return 1.0 + (u - 0.7) / (0.95 - u)
+        # q_factor (repro.scenario.screen, shared with the vectorized
+        # plan screen): deterministic slide-aligned arrivals — a work-
+        # conserving server is stable below saturation, then the
+        # backlog diverges; mild inflation approaching the cliff.
 
         # DC composition pressure: duty-cycle chip demand vs the grid
         demand = 0.0
@@ -337,6 +330,9 @@ class OnlineController:
             "search_regret": round(max(0.0, new.vos - chosen.vos), 4)
             if new.feasible and chosen.feasible else None,
             "switched": switched,
+            "search": {"method": sr.method, "evaluations": sr.evaluations,
+                       "cache_hits": sr.cache_hits,
+                       "cache_misses": sr.cache_misses},
         })
         return self.current
 

@@ -5,17 +5,31 @@ edge|dc assignments (plus the DC chips/DVFS hints), subject to the
 constraints the co-simulator enforces (edge RAM, DC power cap —
 infeasible plans score −inf).
 
-Small plan spaces are searched exhaustively; larger ones fall back to a
-greedy descent from the better of the all-edge / all-DC anchors,
-polished with seeded random-restart hill climbing. All evaluations are
-memoized on the plan's canonical key, and every step is deterministic
-for a fixed seed.
+Two evaluation tiers:
+
+  * **Screened** (the fast path, used whenever the scorer exposes a
+    ``screening_model`` — i.e. the unified ``ScenarioEngine``): the
+    whole candidate space (or a seeded sample + vectorized hill climb
+    for fleet-scale spaces) is scored in batched numpy passes by
+    :class:`repro.scenario.screen.ScreeningModel`; the exact DES replay
+    runs only on the top-K screened survivors plus the anchor plans, so
+    a search pays a handful of co-simulations instead of hundreds.
+  * **Exact** (the legacy path, and the only one for analytic scorers
+    like the online controller's ``ForecastModel``): small plan spaces
+    exhaustively, larger ones greedy descent from the all-edge / all-DC
+    anchors polished with seeded random-restart hill climbing.
+
+All exact evaluations are memoized on the plan's canonical key, and
+every step — screening included — is deterministic for a fixed seed.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.placement.cosim import CoSimResult, CoSimulator
 from repro.placement.plan import (PlacementPlan, ServicePlacement, SITE_EDGE,
@@ -27,8 +41,20 @@ class SearchResult:
     plan: PlacementPlan
     result: CoSimResult
     method: str
-    evaluations: int
+    evaluations: int                   # fresh exact co-sims THIS search ran
     history: List[Tuple[str, float]]   # (plan label, vos) in eval order
+    screen: Optional[Dict] = None      # tier-1 screening stats (if used)
+    cache_hits: int = 0                # evaluator cache hits during search
+    cache_misses: int = 0              # fresh exact runs during search
+
+    def stats(self) -> Dict:
+        """JSON-safe digest for benchmark reports."""
+        out = {"method": self.method, "evaluations": self.evaluations,
+               "cache_hits": self.cache_hits,
+               "cache_misses": self.cache_misses}
+        if self.screen is not None:
+            out["screen"] = dict(self.screen)
+        return out
 
 
 class Evaluator:
@@ -38,21 +64,64 @@ class Evaluator:
     Accepts anything that quacks like a plan scorer: the unified
     :class:`~repro.scenario.engine.ScenarioEngine` (via ``run_plan``),
     the deprecated ``CoSimulator`` shim, or an analytic stand-in like
-    the online controller's ``ForecastModel`` (via ``run``)."""
+    the online controller's ``ForecastModel`` (via ``run``).
 
-    def __init__(self, cosim: CoSimulator):
+    Counters: ``hits`` / ``misses`` split cached from fresh exact runs
+    (``evaluations`` alone used to conflate them); ``screened`` counts
+    plans scored by the tier-1 vectorized screen (never co-simulated
+    unless they survive into the top-K)."""
+
+    def __init__(self, cosim: CoSimulator, screener=None):
         self.cosim = cosim
         self._run = getattr(cosim, "run_plan", None) or cosim.run
         self.cache: Dict[Tuple, CoSimResult] = {}
         self.history: List[Tuple[str, float]] = []
+        self.hits = 0
+        self.misses = 0
+        self.screened = 0
+        self._screener = screener
 
     def __call__(self, plan: PlacementPlan) -> CoSimResult:
         key = plan.key()
         if key not in self.cache:
+            self.misses += 1
             res = self._run(plan)
             self.cache[key] = res
             self.history.append((plan.label, res.vos))
+        else:
+            self.hits += 1
         return self.cache[key]
+
+    @property
+    def screener(self):
+        """Tier-1 batch screener, if the scorer can build one."""
+        if self._screener is None:
+            make = getattr(self.cosim, "screening_model", None)
+            if make is not None:
+                self._screener = make()
+        return self._screener
+
+    def screen_batch(self, plans: Sequence[PlacementPlan]) -> np.ndarray:
+        s = self.screener
+        if s is None:
+            raise ValueError(f"{type(self.cosim).__name__} has no "
+                             "screening model")
+        self.screened += len(plans)
+        return s.score_batch(plans)
+
+    def screen_matrix(self, P: np.ndarray, options) -> np.ndarray:
+        """Index-matrix twin of :meth:`screen_batch` (what the sampled
+        hill-climbing search uses); same counter, same screener."""
+        s = self.screener
+        if s is None:
+            raise ValueError(f"{type(self.cosim).__name__} has no "
+                             "screening model")
+        self.screened += len(P)
+        return s.score_matrix(P, options)
+
+    def stats(self) -> Dict:
+        return {"evaluations": self.evaluations, "cache_hits": self.hits,
+                "cache_misses": self.misses, "screened": self.screened}
 
     @property
     def evaluations(self) -> int:
@@ -70,6 +139,7 @@ def exhaustive_search(cosim: CoSimulator,
                       edge_sites: Sequence[str] = (SITE_EDGE,),
                       ) -> SearchResult:
     ev = evaluator or Evaluator(cosim)
+    hits0, misses0 = ev.hits, ev.misses
     names = list(cosim.topology)
     best_plan: Optional[PlacementPlan] = None
     best: Optional[CoSimResult] = None
@@ -79,8 +149,9 @@ def exhaustive_search(cosim: CoSimulator,
         if best is None or _score(res) > _score(best):
             best_plan, best = plan, res
     assert best_plan is not None and best is not None
-    return SearchResult(best_plan, best, "exhaustive", ev.evaluations,
-                        ev.history)
+    return SearchResult(best_plan, best, "exhaustive", ev.misses - misses0,
+                        ev.history, cache_hits=ev.hits - hits0,
+                        cache_misses=ev.misses - misses0)
 
 
 def _greedy(ev: Evaluator, start: PlacementPlan,
@@ -132,6 +203,7 @@ def greedy_search(cosim: CoSimulator,
                   evaluator: Optional[Evaluator] = None,
                   edge_sites: Sequence[str] = (SITE_EDGE,)) -> SearchResult:
     ev = evaluator or Evaluator(cosim)
+    hits0, misses0 = ev.hits, ev.misses
     names = list(cosim.topology)
     options = service_options(chips_options, dvfs_options, edge_sites)
     rng = random.Random(seed)
@@ -151,8 +223,139 @@ def greedy_search(cosim: CoSimulator,
         if best_plan is None or _score(ev(local)) > _score(ev(best_plan)):
             best_plan = local
     assert best_plan is not None
-    return SearchResult(best_plan, ev(best_plan), "greedy+hillclimb",
-                        ev.evaluations, ev.history)
+    best = ev(best_plan)
+    return SearchResult(best_plan, best, "greedy+hillclimb",
+                        ev.misses - misses0, ev.history,
+                        cache_hits=ev.hits - hits0,
+                        cache_misses=ev.misses - misses0)
+
+
+def _anchor_plans(names: Sequence[str], chips_options: Sequence[int],
+                  dvfs_options: Sequence[float],
+                  edge_sites: Sequence[str]) -> List[PlacementPlan]:
+    """The baseline plans every screened search re-scores exactly (so
+    ``searched >= baselines`` holds even under a screening mis-rank)."""
+    plans = [PlacementPlan.all_edge(names, site=s) for s in edge_sites]
+    plans.append(PlacementPlan.all_dc(names, chips=chips_options[0],
+                                      dvfs_f=dvfs_options[0]))
+    return plans
+
+
+def _plan_of_row(row, names: Sequence[str],
+                 options: Sequence[ServicePlacement]) -> PlacementPlan:
+    return PlacementPlan({n: options[int(o)] for n, o in zip(names, row)})
+
+
+def screened_search(cosim: CoSimulator,
+                    chips_options: Sequence[int] = (4, 8, 16),
+                    dvfs_options: Sequence[float] = (1.0,),
+                    seed: int = 0,
+                    top_k: Optional[int] = None,
+                    evaluator: Optional[Evaluator] = None,
+                    edge_sites: Sequence[str] = (SITE_EDGE,),
+                    enumerate_limit: int = 65536,
+                    sample_budget: int = 2048,
+                    climbers: int = 8,
+                    climb_rounds: int = 32) -> SearchResult:
+    """Two-tier search: tier 1 scores candidates in vectorized batches
+    on the screening model (the whole plan space when it enumerates
+    under ``enumerate_limit``, else anchors + a seeded random sample
+    refined by batched single-flip hill climbing on the screening
+    surface); tier 2 runs the exact DES co-simulation only on the
+    top-K screened survivors plus the anchor plans, which bounds the
+    damage of a screening mis-rank. Deterministic for a fixed seed."""
+    ev = evaluator or Evaluator(cosim)
+    screener = ev.screener
+    if screener is None:
+        raise ValueError(f"{type(cosim).__name__} exposes no "
+                         "screening_model; use exhaustive/greedy search")
+    hits0, misses0 = ev.hits, ev.misses
+    names = list(screener.order)
+    options = service_options(chips_options, dvfs_options, edge_sites)
+    S, n_opts = len(names), len(options)
+    space = n_opts ** S
+
+    t0 = time.perf_counter()
+    anchors = _anchor_plans(names, chips_options, dvfs_options, edge_sites)
+    if space <= enumerate_limit:
+        grids = np.meshgrid(*([np.arange(n_opts)] * S), indexing="ij")
+        P = np.stack(grids, axis=-1).reshape(-1, S)
+        scores = ev.screen_matrix(P, options)
+        method = "screened-exhaustive"
+    else:
+        rng = np.random.default_rng(seed)
+        A = screener.matrix_of(anchors, options)
+        P = np.vstack([A, rng.integers(0, n_opts, size=(sample_budget, S))])
+        scores = ev.screen_matrix(P, options)
+        # batched first-improvement hill climb from the best seeds: each
+        # round scores every single-flip neighbor of every live climber
+        # in ONE vectorized pass
+        order = np.argsort(-scores, kind="stable")
+        cur = P[order[:climbers]].copy()
+        cur_sc = scores[order[:climbers]].copy()
+        for _ in range(climb_rounds):
+            neigh, owner = [], []
+            for ci, row in enumerate(cur):
+                for si in range(S):
+                    for o in range(n_opts):
+                        if o != row[si]:
+                            r = row.copy()
+                            r[si] = o
+                            neigh.append(r)
+                            owner.append(ci)
+            Nb = np.asarray(neigh)
+            sc = ev.screen_matrix(Nb, options)
+            owner = np.asarray(owner)
+            improved = False
+            for ci in range(len(cur)):
+                mine = np.where(owner == ci)[0]
+                bi = mine[np.argmax(sc[mine])]
+                if sc[bi] > cur_sc[ci]:
+                    cur[ci], cur_sc[ci] = Nb[bi], sc[bi]
+                    improved = True
+            P = np.vstack([P, Nb])
+            scores = np.concatenate([scores, sc])
+            if not improved:
+                break
+        method = "screened-sampled"
+    screen_wall = time.perf_counter() - t0
+
+    # deterministic top-K: stable sort on score, dedup on canonical key
+    if top_k is None:
+        top_k = (max(2, min(16, space // 10))
+                 if method == "screened-exhaustive" else 16)
+    order = np.argsort(-scores, kind="stable")
+    survivors: List[PlacementPlan] = []
+    seen = set()
+    for i in order:
+        plan = _plan_of_row(P[i], names, options)
+        key = plan.key()
+        if key in seen:
+            continue
+        seen.add(key)
+        survivors.append(plan)
+        if len(survivors) >= top_k:
+            break
+    screen_best_key = survivors[0].key() if survivors else None
+
+    # tier 2: exact DES on survivors + anchors (memoized)
+    best_plan: Optional[PlacementPlan] = None
+    best: Optional[CoSimResult] = None
+    for plan in survivors + anchors:
+        res = ev(plan)
+        if best is None or _score(res) > _score(best):
+            best_plan, best = plan, res
+    assert best_plan is not None and best is not None
+    screen_stats = {
+        "screened": int(len(P)), "space": int(space), "top_k": int(top_k),
+        "survivors": len(survivors), "anchors": len(anchors),
+        "screen_wall_s": round(screen_wall, 4),
+        "agreement": bool(screen_best_key == best_plan.key()),
+    }
+    return SearchResult(best_plan, best, method, ev.misses - misses0,
+                        ev.history, screen=screen_stats,
+                        cache_hits=ev.hits - hits0,
+                        cache_misses=ev.misses - misses0)
 
 
 def search_placement(cosim: CoSimulator,
@@ -161,16 +364,29 @@ def search_placement(cosim: CoSimulator,
                      exhaustive_limit: int = 1024,
                      seed: int = 0,
                      evaluator: Optional[Evaluator] = None,
-                     edge_sites: Sequence[str] = (SITE_EDGE,)) -> SearchResult:
-    """Front door: exhaustive when the plan space fits under
-    `exhaustive_limit` evaluations, greedy + hill-climb otherwise.
-    ``edge_sites`` widens the per-service choice set to a multi-gateway
-    fleet; the evaluator must understand those site names (the online
-    controller's forecast model does)."""
+                     edge_sites: Sequence[str] = (SITE_EDGE,),
+                     screen: Optional[bool] = None,
+                     top_k: Optional[int] = None) -> SearchResult:
+    """Front door. When the scorer can build a tier-1 screening model
+    (the unified ``ScenarioEngine`` can; analytic scorers like the
+    online ``ForecastModel`` cannot) the two-tier screened search is
+    the default fast path — pass ``screen=False`` to force the legacy
+    exact-only search. Without a screener: exhaustive when the plan
+    space fits under ``exhaustive_limit`` evaluations, greedy +
+    hill-climb otherwise. ``edge_sites`` widens the per-service choice
+    set to a multi-gateway fleet; the evaluator must understand those
+    site names."""
+    ev = evaluator or Evaluator(cosim)
+    if screen is None:
+        screen = ev.screener is not None
+    if screen:
+        return screened_search(cosim, chips_options, dvfs_options,
+                               seed=seed, top_k=top_k, evaluator=ev,
+                               edge_sites=edge_sites)
     n_opts = len(edge_sites) + len(chips_options) * len(dvfs_options)
     space = n_opts ** len(cosim.topology)
     if space <= exhaustive_limit:
         return exhaustive_search(cosim, chips_options, dvfs_options,
-                                 evaluator=evaluator, edge_sites=edge_sites)
+                                 evaluator=ev, edge_sites=edge_sites)
     return greedy_search(cosim, chips_options, dvfs_options, seed=seed,
-                         evaluator=evaluator, edge_sites=edge_sites)
+                         evaluator=ev, edge_sites=edge_sites)

@@ -10,6 +10,9 @@ The public surface of the co-simulation stack:
                 persistent JITA-4DS Simulator (event-feed DES bridge);
                 ``run_plan`` for static placements, ``run(controller)``
                 for epoch-based re-placement
+  screen.py     ScreeningModel — tier-1 vectorized batch plan scorer
+                over the placement-independent fire trace (the fast
+                path of ``repro.placement.search``)
   profiles.py   ServiceSLO / ServiceProfile — the single source of
                 truth for operator cost
   calibrate.py  KernelCalibrator — measure flops_per_record from Pallas
@@ -31,3 +34,4 @@ from repro.scenario.spec import (FarmSpec, RateSpec, ScenarioBuilder,
                                  scenario)
 from repro.scenario.calibrate import (Calibration, KernelCalibrator,
                                       calibrate_profiles)
+from repro.scenario.screen import ScreeningModel, ScreenResult

@@ -400,6 +400,8 @@ class ScenarioEngine:
         self._fresh_pipe: Optional[Pipeline] = pipe
         self._driven = None
         self._true_rates: Optional[List[Dict[str, float]]] = None
+        self._ledger_static: Optional[Dict[str, Dict]] = None
+        self._screen = None
 
     @property
     def all_sites(self) -> Tuple[str, ...]:
@@ -436,6 +438,18 @@ class ScenarioEngine:
                     out[k][svc] /= max(t1 - t0, _EPS)
             self._true_rates = out
         return [dict(r) for r in self._true_rates]
+
+    def screening_model(self):
+        """Cached tier-1 vectorized plan screener over this engine's
+        (placement-independent) fire trace — see
+        :class:`repro.scenario.screen.ScreeningModel`. The screened
+        search (``repro.placement.search.screened_search``) uses it to
+        score whole candidate batches in one numpy pass and reserves
+        the exact DES replay for the top-K survivors."""
+        if self._screen is None:
+            from repro.scenario.screen import ScreeningModel
+            self._screen = ScreeningModel(self)
+        return self._screen
 
     def info(self) -> BridgeInfo:
         return BridgeInfo(topology=self.topology, profiles=self.profiles,
@@ -501,12 +515,28 @@ class ScenarioEngine:
         return g.arrival_at[dst]
 
     def _dep_time(self, f: _OFire, dst: str) -> float:
+        """Latest arrival (at ``dst``) of any settled upstream result.
+        Incremental per (consumer, upstream, dst): the settled prefix of
+        an upstream only grows as the consumer's fires advance in ts
+        order, so each upstream fire is visited once per destination
+        instead of rescanned per dispatch. ``_result_arrival`` caching
+        keeps the FIFO-uplink side effects identical to a full rescan."""
         t = f.ts
         for u in self.topology[f.svc]:
             k = bisect.bisect_left(self._ts[u], f.ts)
-            for g in self._fires[u][:k]:
+            key = (f.svc, u, dst)
+            ptr, mx = self._dep_ptr.get(key, (0, float("-inf")))
+            arr = self._fires[u]
+            while ptr < k:
+                g = arr[ptr]
                 if g.state == "done" and g.ready_out is not None:
-                    t = max(t, self._result_arrival(g, dst))
+                    a = self._result_arrival(g, dst)
+                    if a > mx:
+                        mx = a
+                ptr += 1
+            self._dep_ptr[key] = (ptr, mx)
+            if mx > t:
+                t = mx
         return t
 
     def _ship_inputs(self, f: _OFire, base: float) -> float:
@@ -720,6 +750,7 @@ class ScenarioEngine:
         self._equeue: List[Tuple] = []
         self._waiting: Dict[Tuple[str, int], Task] = {}
         self._task_by_key: Dict[Tuple[str, int], Task] = {}
+        self._dep_ptr: Dict[Tuple[str, str, str], Tuple[int, float]] = {}
         self._stalls: Dict[str, List[Tuple[float, float]]] = {}
         self._plans: List[PlacementPlan] = []
         self._next_tid = 0
@@ -875,15 +906,15 @@ class ScenarioEngine:
         ledger, per_site = self._ledger(pipe, staps, qtaps)
         lat = (np.asarray(latencies) if latencies
                else np.asarray([float("nan")]))
+        p50, p95, p99 = np.percentile(lat, (50, 95, 99))
         return EngineResult(
             label=getattr(controller, "label", type(controller).__name__),
             vos=vos, vos_normalized=vos / max(max_vos, 1e-6),
             fires_total=sum(len(fl) for fl in self._fires.values()),
             fires_completed=completed, fires_dropped=dropped,
             fires_inflight=inflight,
-            latency_p50=float(np.percentile(lat, 50)),
-            latency_p95=float(np.percentile(lat, 95)),
-            latency_p99=float(np.percentile(lat, 99)),
+            latency_p50=float(p50), latency_p95=float(p95),
+            latency_p99=float(p99),
             edge_energy_j=self._fleet.edge_energy_j,
             network_energy_j=self._fleet.network_energy_j,
             dc_energy_j=sim_result.total_energy_j,
@@ -893,30 +924,46 @@ class ScenarioEngine:
             migrations=n_migs, ledger=ledger, per_site=per_site,
             per_service=per_service, epochs=epoch_meta, dc=sim_result)
 
+    def _ledger_skeleton(self) -> Dict[str, Dict]:
+        """Plan-independent ledger fields (record identity partitions
+        over the engine's one cached drive). Computed once and copied
+        per run — a search over many plans used to redo the id()-set
+        algebra on every evaluation."""
+        if self._ledger_static is not None:
+            return self._ledger_static
+        pipe, staps, qtaps = self._ensure_driven()
+        out: Dict[str, Dict] = {}
+        for svc_obj in pipe.services:
+            name = svc_obj.cfg.name
+            tap, qtap = staps[name], qtaps[name]
+            fetched_ids = set(qtap.fetched.get(name, {}))
+            covered_ids = set(tap.covered)
+            buf_ids = set(map(id, svc_obj.buffer))
+            drop_ids = set(map(id, qtap.drop_refs))
+            evicted_unc = fetched_ids - buf_ids - covered_ids
+            out[name] = {
+                "queue": svc_obj.cfg.queue,
+                "produced": len(qtap.pub_refs),
+                "overflow": len(drop_ids - fetched_ids),
+                "unread": len(set(map(id, svc_obj.q.buf)) - fetched_ids),
+                "fetched": len(fetched_ids),
+                "buffered": len(buf_ids - covered_ids),
+                ("evicted_stored" if svc_obj.cfg.store is not None
+                 else "evicted_lost"): len(evicted_unc),
+            }
+        self._ledger_static = out
+        return out
+
     def _ledger(self, pipe: Pipeline, staps, qtaps
                 ) -> Tuple[RecordLedger, Dict[str, Dict]]:
         ledger = RecordLedger()
         site_processed: Dict[str, int] = {s: 0
                                           for s in self.cfg.fleet.site_names}
         site_processed[SITE_DC] = 0
+        skeleton = self._ledger_skeleton()
         for svc_obj in pipe.services:
             name = svc_obj.cfg.name
-            tap, qtap = staps[name], qtaps[name]
-            fetched = qtap.fetched.get(name, {})
-            covered = tap.covered
-            buf_ids = {id(r) for r in svc_obj.buffer}
-            drop_ids = {id(r) for r in qtap.drop_refs}
-            sl = ServiceLedger(service=name, queue=svc_obj.cfg.queue)
-            sl.produced = len(qtap.pub_refs)
-            sl.overflow = len(drop_ids - set(fetched))
-            sl.unread = sum(1 for r in svc_obj.q.buf if id(r) not in fetched)
-            sl.fetched = len(fetched)
-            sl.buffered = len(buf_ids - set(covered))
-            evicted_unc = set(fetched) - buf_ids - set(covered)
-            if svc_obj.cfg.store is not None:
-                sl.evicted_stored = len(evicted_unc)
-            else:
-                sl.evicted_lost = len(evicted_unc)
+            sl = ServiceLedger(service=name, **skeleton[name])
             for f in self._fires[name]:
                 if f.state == "done" and f.site != SITE_DC:
                     sl.processed_edge += f.n_new

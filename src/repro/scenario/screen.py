@@ -1,0 +1,357 @@
+"""Tier-1 plan screening: score whole batches of placement plans in
+vectorized numpy passes over the placement-independent fire trace.
+
+The unified engine drives the functional dataflow exactly once per
+scenario (the fire trace — timestamps, window sizes, newly-covered
+record counts and their origins — does not depend on placement). A
+:class:`ScreeningModel` precomputes per-service, per-placement-option
+arrays from that trace (fire durations, energies, energy-curve values)
+and evaluates the latency / energy / VoS of N candidate plans as array
+ops, folding in the same analytic queueing terms the online
+controller's ``ForecastModel`` uses (device saturation, shared-uplink
+serialization load, DC composition pressure, serial-device rank
+blocking) — but trace-driven rather than rate-driven, so actual window
+sizes and fire counts are respected.
+
+The screen is a *ranking* model: the exact DES engine re-scores only
+the top-K screened survivors (plus the anchors / incumbent), which
+bounds the damage of any screening mis-rank — see
+``repro.placement.search.screened_search``. Screening is deterministic
+(pure array math, no RNG).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.placement.plan import SITE_DC, PlacementPlan, ServicePlacement
+
+# Deterministic-arrival queueing inflation, shared with the online
+# controller's ForecastModel (the single source of these knees): a
+# work-conserving server is stable below saturation, inflates mildly
+# approaching it, cliffs at it.
+NEVER_S = 1e9
+Q_KNEE = 0.7
+Q_CLIFF = 0.95
+
+
+def q_factor(u: float) -> float:
+    """Scalar queueing inflation (``ForecastModel`` uses this)."""
+    if u >= Q_CLIFF:
+        return NEVER_S
+    if u <= Q_KNEE:
+        return 1.0
+    return 1.0 + (u - Q_KNEE) / (Q_CLIFF - u)
+
+
+def _q_factor(u: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`q_factor`."""
+    out = np.ones_like(u)
+    mid = (u > Q_KNEE) & (u < Q_CLIFF)
+    out[mid] = 1.0 + (u[mid] - Q_KNEE) / (Q_CLIFF - u[mid])
+    out[u >= Q_CLIFF] = NEVER_S
+    return out
+
+
+@dataclasses.dataclass
+class ScreenResult:
+    """Duck-typed stand-in for CoSimResult (what the search scorer
+    reads); ``vos`` here is the *screened* estimate, not DES truth."""
+    vos: float
+    feasible: bool
+    plan_label: str = ""
+    infeasible_reason: str = ""
+
+
+@dataclasses.dataclass
+class _OptionData:
+    """Per-(service, option) trace arrays."""
+    dur: np.ndarray       # per-fire service time on this option
+    v_e: np.ndarray       # per-fire energy-curve value (plan-independent)
+    busy: float           # dur.sum() — device / VDC occupancy seconds
+    mean_dur: float
+
+
+class ScreeningModel:
+    """Vectorized batch scorer over one compiled scenario's fire trace.
+
+    Built via :meth:`ScenarioEngine.screening_model` (cached on the
+    engine, sharing its one functional drive). ``score_batch`` maps a
+    sequence of plans to screened VoS estimates; ``score_matrix`` is
+    the allocation-free core for index-matrix candidates (what the
+    sampled / hill-climbing search uses on large fleets).
+    """
+
+    def __init__(self, engine):
+        engine._ensure_driven()
+        _, staps, _ = engine._driven
+        cfg = engine.cfg
+        self.engine = engine
+        self.order: List[str] = list(engine.order)
+        self.rank = {s: i for i, s in enumerate(self.order)}
+        self.topology = engine.topology
+        self.horizon_s = float(cfg.horizon_s)
+        self.grid_chips = cfg.grid_shape[0] * cfg.grid_shape[1]
+        self.records_per_step = cfg.records_per_step
+        self.cost = engine.cost
+
+        fleet = cfg.fleet
+        self.site_names: List[str] = list(fleet.site_names)
+        self._site_idx = {n: j for j, n in enumerate(self.site_names)}
+        self._edge = [fleet.site(n).edge for n in self.site_names]
+        self._link = [fleet.site(n).link for n in self.site_names]
+        self._ram = np.array([e.ram_bytes for e in self._edge])
+        user = self._site_idx[fleet.result_site]
+        self.dl_user_s = (self._link[user].rtt_s / 2
+                          + self._link[user].result_bytes
+                          / self._link[user].downlink_bps)
+
+        self._svc: Dict[str, Dict] = {}
+        for s in self.order:
+            prof = engine.profiles[s]
+            info = engine.services_info[s]
+            fires = staps[s].fires
+            nw = np.array([f.n_window for f in fires], dtype=float)
+            origin_keys = [None] + list(self.topology[s])
+            origins = {k: np.array([f.origins.get(k, 0) for f in fires],
+                                   dtype=float) for k in origin_keys}
+            spec = prof.slo.value_spec()
+            self._svc[s] = {
+                "profile": prof, "info": info, "nw": nw,
+                "origins": origins, "spec": spec,
+                "farm_site": self._site_idx[fleet.farm_site(info.queue)],
+                "budget": float(info.buffer_budget),
+                "slide": float(info.slide_s),
+            }
+        self._opt_cache: Dict[Tuple, _OptionData] = {}
+
+    # ------------------------------------------------------ option tables
+    def _opt(self, svc: str, p: ServicePlacement) -> _OptionData:
+        key = (svc, p.site, p.chips if not p.is_edge else 0,
+               p.dvfs_f if not p.is_edge else 0.0)
+        d = self._opt_cache.get(key)
+        if d is not None:
+            return d
+        sv = self._svc[svc]
+        nw, prof, spec = sv["nw"], sv["profile"], sv["spec"]
+        if p.is_edge:
+            e = self._edge[self._site_idx[p.site]]
+            dur = (np.maximum(nw / e.throughput_rps,
+                              nw * prof.flops_per_record / e.flops_per_s)
+                   + e.fire_overhead_s)
+            energy = nw * e.energy_per_record_j + dur * e.active_power_w
+        else:
+            steps = np.maximum(1.0, np.ceil(nw / self.records_per_step))
+            t_step = self.cost.time_per_step(f"svc:{svc}", "window",
+                                             p.chips, p.dvfs_f)
+            dur = steps * t_step
+            energy = steps * self.cost.energy_per_step(
+                f"svc:{svc}", "window", p.chips, p.dvfs_f)
+        d = _OptionData(dur=dur, v_e=spec.energy_curve.value_array(energy),
+                        busy=float(dur.sum()),
+                        mean_dur=float(dur.mean()) if len(dur) else 0.0)
+        self._opt_cache[key] = d
+        return d
+
+    # --------------------------------------------------------------- core
+    def score_matrix(self, P: np.ndarray,
+                     options: Sequence[ServicePlacement]) -> np.ndarray:
+        """Screened VoS for ``P[n, s]`` = option index of service
+        ``order[s]`` in plan ``n``. Infeasible plans (site RAM) score
+        ``-inf``. Deterministic. Every term is per-plan, so the batch
+        is chunked along the plan axis to bound the O(plans × fires)
+        temporaries (a 65k-plan enumeration over a small-slide trace
+        would otherwise allocate multi-GB latency matrices)."""
+        max_fires = max((len(sv["nw"]) for sv in self._svc.values()),
+                        default=1)
+        chunk = max(256, 2_000_000 // max(1, max_fires))
+        if len(P) > chunk:
+            return np.concatenate(
+                [self._score_chunk(P[i:i + chunk], options)
+                 for i in range(0, len(P), chunk)])
+        return self._score_chunk(P, options)
+
+    def _score_chunk(self, P: np.ndarray,
+                     options: Sequence[ServicePlacement]) -> np.ndarray:
+        N, S = P.shape
+        assert S == len(self.order)
+        nsites = len(self.site_names)
+        site_for = np.array([self._site_idx.get(o.site, -1)
+                             for o in options])        # -1 = DC
+        chips_for = np.array([o.chips if not o.is_edge else 0
+                              for o in options])
+
+        # plan-level context terms -------------------------------------
+        util = np.zeros((N, nsites))
+        dc_demand = np.zeros(N)
+        ram_need = np.zeros((N, nsites))
+        up_load = np.zeros(N)
+        exec_site = np.empty((N, S), dtype=int)   # -1 = DC
+        for si, s in enumerate(self.order):
+            col = P[:, si]
+            exec_site[:, si] = site_for[col]
+            sv = self._svc[s]
+            for o in np.unique(col):
+                mask = col == o
+                d = self._opt(s, options[o])
+                j = site_for[o]
+                if j >= 0:
+                    util[mask, j] += d.busy / self.horizon_s
+                    ram_need[mask, j] += (sv["budget"]
+                                          * self._edge[j].record_bytes)
+                else:
+                    dc_demand[mask] += chips_for[o] * d.busy / self.horizon_s
+
+        # shared-uplink serialization load: raw records hauled off their
+        # origin site (cross-site moves and edge→DC offloads alike — the
+        # engine's FIFO pipe serializes both)
+        for si, s in enumerate(self.order):
+            sv = self._svc[s]
+            dst = exec_site[:, si]
+            for okey, counts in sv["origins"].items():
+                total = float(counts.sum())
+                if total == 0.0:
+                    continue
+                osite = (np.full(N, sv["farm_site"]) if okey is None
+                         else exec_site[:, self.rank[okey]])
+                for j in range(nsites):
+                    m = (osite == j) & (dst != j)
+                    if not m.any():
+                        continue
+                    ln = self._link[j]
+                    wire = total * ln.record_bytes * ln.compression
+                    up_load[m] += wire / ln.uplink_bps / self.horizon_s
+
+        q_site = _q_factor(util)
+        q_up = _q_factor(up_load)
+        dc_over = np.maximum(1.0, dc_demand / self.grid_chips)
+        feasible = (ram_need <= self._ram[None, :]).all(axis=1)
+
+        # serial-device rank blocking: a service queued behind an
+        # earlier-rank co-located service eats its fire time
+        rank_wait = np.zeros((N, S))
+        for si, s in enumerate(self.order):
+            slide_s = self._svc[s]["slide"]
+            for oi, o in enumerate(self.order):
+                if oi >= si:
+                    continue
+                both = ((exec_site[:, si] >= 0)
+                        & (exec_site[:, oi] == exec_site[:, si]))
+                if not both.any():
+                    continue
+                align = min(1.0, slide_s / self._svc[o]["slide"])
+                col = P[:, oi]
+                for opt in np.unique(col[both]):
+                    m = both & (col == opt)
+                    rank_wait[m, si] += align * self._opt(
+                        o, options[opt]).mean_dur
+
+        # upstream result-handoff hop (max over upstream cuts; a DC
+        # destination pays nothing extra here — its downlink is folded
+        # into dl_user, exactly like ForecastModel)
+        hop = np.zeros((N, S))
+        rtt = np.array([self._link[j].rtt_s for j in range(nsites)])
+        for si, s in enumerate(self.order):
+            my = exec_site[:, si]
+            rtt_my = np.where(my >= 0, rtt[np.clip(my, 0, None)], 0.0)
+            for u in self.topology[s]:
+                us = exec_site[:, self.rank[u]]
+                rtt_us = np.where(us >= 0, rtt[np.clip(us, 0, None)], 0.0)
+                h = np.where((us != my) & (my >= 0),
+                             rtt_my / 2 + np.where(us >= 0, rtt_us / 2, 0.0),
+                             0.0)
+                hop[:, si] = np.maximum(hop[:, si], h)
+
+        # per-service, per-option value accumulation -------------------
+        vos = np.zeros(N)
+        for si, s in enumerate(self.order):
+            sv = self._svc[s]
+            spec = sv["spec"]
+            col = P[:, si]
+            dst = exec_site[:, si]
+            # cross-site raw-record haul / edge→DC transfer, per fire
+            # per plan (depends on the origin sites, i.e. the plan)
+            haul = np.zeros((N, len(sv["nw"])))
+            for okey, counts in sv["origins"].items():
+                if not counts.any():
+                    continue
+                osite = (np.full(N, sv["farm_site"]) if okey is None
+                         else exec_site[:, self.rank[okey]])
+                for j in range(len(self.site_names)):
+                    m = (osite == j) & (dst != j)
+                    if not m.any():
+                        continue
+                    ln = self._link[j]
+                    wire = counts * ln.record_bytes * ln.compression
+                    leg = (ln.rtt_s / 2
+                           + wire[None, :] / ln.uplink_bps
+                           * q_up[m, None])
+                    # onto another edge site: relay over its downlink
+                    e_m = m & (dst >= 0)
+                    if e_m.any():
+                        dn = np.zeros((int(e_m.sum()), len(counts)))
+                        sub = dst[e_m]
+                        for jj in np.unique(sub):
+                            lnd = self._link[jj]
+                            dn[sub == jj] = (lnd.rtt_s / 2
+                                             + counts[None, :]
+                                             * lnd.record_bytes
+                                             / lnd.downlink_bps)
+                        haul[e_m] += leg[dst[m] >= 0] + dn
+                    d_m = m & (dst < 0)
+                    if d_m.any():
+                        haul[d_m] += leg[dst[m] < 0]
+            for o in np.unique(col):
+                mask = col == o
+                d = self._opt(s, options[o])
+                j = site_for[o]
+                if j >= 0:
+                    lat = ((d.dur[None, :] + rank_wait[mask, si, None])
+                           * q_site[mask, j, None]
+                           + hop[mask, si, None] + haul[mask])
+                else:
+                    lat = (haul[mask]
+                           + d.dur[None, :] * dc_over[mask, None]
+                           + self.dl_user_s)
+                v_p = spec.perf_curve.value_array(lat)
+                v = np.where((v_p > 0.0) & (d.v_e[None, :] > 0.0),
+                             spec.gamma * (spec.w_p * v_p
+                                           + spec.w_e * d.v_e[None, :]),
+                             0.0)
+                vos[mask] += v.sum(axis=1)
+        vos[~feasible] = float("-inf")
+        return vos
+
+    # ------------------------------------------------------------ fronts
+    def matrix_of(self, plans: Sequence[PlacementPlan],
+                  options: Sequence[ServicePlacement]) -> np.ndarray:
+        idx = {(o.site, o.chips if not o.is_edge else 0,
+                o.dvfs_f if not o.is_edge else 0.0): i
+               for i, o in enumerate(options)}
+        P = np.empty((len(plans), len(self.order)), dtype=int)
+        for n, plan in enumerate(plans):
+            for si, s in enumerate(self.order):
+                p = plan.placement(s)
+                P[n, si] = idx[(p.site, p.chips if not p.is_edge else 0,
+                                p.dvfs_f if not p.is_edge else 0.0)]
+        return P
+
+    def score_batch(self, plans: Sequence[PlacementPlan]) -> np.ndarray:
+        """Screened VoS for arbitrary plans (options inferred)."""
+        seen: Dict[Tuple, ServicePlacement] = {}
+        for plan in plans:
+            for p in plan.assignments.values():
+                seen.setdefault((p.site, p.chips if not p.is_edge else 0,
+                                 p.dvfs_f if not p.is_edge else 0.0), p)
+        options = list(seen.values())
+        return self.score_matrix(self.matrix_of(plans, options), options)
+
+    def run(self, plan: PlacementPlan) -> ScreenResult:
+        """Single-plan front (duck-compatible with the search scorer)."""
+        vos = float(self.score_batch([plan])[0])
+        if math.isinf(vos) and vos < 0:
+            return ScreenResult(vos, False, plan.label, "site RAM")
+        return ScreenResult(vos, True, plan.label)

@@ -148,6 +148,38 @@ def test_cosim_determinism():
 
 
 # --------------------------------------------------------------------- search
+def test_evaluator_counts_hits_misses_and_screened():
+    """`evaluations` used to silently conflate cached and fresh runs;
+    the counters split them, and screened plans are tracked separately
+    from exact co-simulations."""
+    from repro.placement import Evaluator
+
+    cs = _cosim()
+    ev = Evaluator(cs)
+    p1 = PlacementPlan.all_edge(NAMES)
+    p2 = PlacementPlan.all_dc(NAMES, chips=4)
+    ev(p1)
+    ev(p1)          # cached
+    ev(p2)
+    assert (ev.hits, ev.misses, ev.evaluations) == (1, 2, 2)
+    assert ev.stats() == {"evaluations": 2, "cache_hits": 1,
+                          "cache_misses": 2, "screened": 0}
+    # the deprecated shim exposes no screening model -> no screen tier
+    assert ev.screener is None
+    with pytest.raises(ValueError, match="screening"):
+        ev.screen_batch([p1])
+
+
+def test_search_forecast_scorer_uses_legacy_path():
+    """Scorers without a screening model (the online ForecastModel
+    shape) must keep working through the exact-only search and report
+    the hit/miss split."""
+    sr = search_placement(_cosim(), chips_options=(4, 8))
+    assert sr.screen is None
+    assert sr.method in ("exhaustive", "greedy+hillclimb")
+    assert sr.cache_misses == sr.evaluations > 0
+
+
 def test_search_no_worse_than_baselines():
     cs = _cosim()
     sr = search_placement(cs, chips_options=(4, 8))

@@ -260,3 +260,91 @@ def test_slo_dataclass_roundtrip():
     slo = ServiceSLO(soft_latency_s=1.0, hard_latency_s=2.0, gamma=2.0,
                      w_p=0.6, shape="linear")
     assert ServiceSLO(**dataclasses.asdict(slo)) == slo
+
+
+# ------------------------------------------- two-tier screened search
+@pytest.mark.skipif(not os.path.exists(_bench_path()),
+                    reason="no recorded BENCH_placement.json")
+def test_screened_search_matches_exact_on_recorded_scenarios():
+    """The fast path must not change the answer: on every recorded
+    placement scenario the two-tier screened search must return the
+    same best-plan VoS as the exact exhaustive/greedy search (tier-2
+    re-scoring of the top-K survivors + anchors bounds any tier-1
+    mis-rank)."""
+    from repro.placement import Evaluator, search_placement
+
+    with open(_bench_path()) as f:
+        rep = json.load(f)
+    assert len(rep["scenarios"]) == 3
+    for name, sc in rep["scenarios"].items():
+        spec = ScenarioSpec.from_dict(sc["spec"])
+        engine = spec.compile()
+        chips = tuple(sc["search"]["chips_options"])
+        exact = search_placement(engine, chips_options=chips,
+                                 dvfs_options=(1.0, 0.7), screen=False)
+        ev = Evaluator(engine)
+        screened = search_placement(engine, chips_options=chips,
+                                    dvfs_options=(1.0, 0.7), evaluator=ev)
+        assert screened.screen is not None, name
+        assert screened.result.vos == pytest.approx(exact.result.vos,
+                                                    abs=1e-9), name
+        # the screened tier really did skip most of the exact work
+        assert screened.evaluations < exact.evaluations, name
+        assert ev.screened >= screened.screen["top_k"], name
+        # and the recorded searched VoS is reproduced by the fast path
+        assert screened.result.vos == pytest.approx(
+            sc["searched"]["vos"], abs=1e-3), name
+
+
+def test_batch_screening_deterministic_and_matches_single():
+    """score_batch is pure array math: identical scores across calls
+    and across fresh engines; the single-plan front agrees with the
+    batched scores."""
+    import numpy as np
+
+    from repro.placement import PlacementPlan, ServicePlacement
+    from repro.placement.plan import enumerate_plans
+
+    spec = _mini_spec()
+    names = spec.service_names()
+    plans = list(enumerate_plans(names, (4, 8), (1.0, 0.7)))
+    s1 = spec.compile().screening_model().score_batch(plans)
+    s2 = spec.compile().screening_model().score_batch(plans)
+    assert np.array_equal(s1, s2)
+    sm = spec.compile().screening_model()
+    for i in (0, 3, len(plans) - 1):
+        r = sm.run(plans[i])
+        assert r.vos == pytest.approx(sm.score_batch([plans[i]])[0])
+    # RAM-infeasible plans screen to -inf, like the engine's run_plan
+    tiny = dataclasses.replace(
+        spec, sites=(dataclasses.replace(
+            spec.sites[0], edge=EdgeSpec(ram_bytes=1024.0)),))
+    r = tiny.compile().screening_model().run(
+        PlacementPlan.all_edge(names))
+    assert not r.feasible and r.vos == float("-inf")
+
+
+def test_screened_search_deterministic_on_sampled_spaces():
+    """Fleet-scale spaces go through seeded sampling + batched hill
+    climbing: a fixed seed must reproduce the same plan, VoS and
+    screening stats (a tiny enumerate_limit forces the sampled path)."""
+    from repro.placement import screened_search
+
+    spec = _rich_spec()
+    spec = dataclasses.replace(spec, epoch_s=None, outages=())
+    sites = tuple(s.name for s in spec.sites)
+    runs = []
+    for _ in range(2):
+        engine = spec.compile()
+        sr = screened_search(engine, chips_options=(4, 8),
+                             dvfs_options=(1.0, 0.7), edge_sites=sites,
+                             seed=7, enumerate_limit=8, sample_budget=64,
+                             climbers=3, climb_rounds=4)
+        runs.append(sr)
+    a, b = runs
+    assert a.method == "screened-sampled"
+    assert a.plan.key() == b.plan.key()
+    assert a.result.vos == b.result.vos
+    screen_a = {k: v for k, v in a.screen.items() if k != "screen_wall_s"}
+    screen_b = {k: v for k, v in b.screen.items() if k != "screen_wall_s"}
+    assert screen_a == screen_b

@@ -162,6 +162,37 @@ def test_withdraw_counts_as_drop(cost):
     assert res.completed + res.dropped == 3
 
 
+def test_pending_order_and_drop_memo(cost):
+    """The indexed pending queue must preserve arrival order (heuristics
+    see the same queue the O(n)-list version exposed), and the memoized
+    drop scan must agree with a fresh _best_possible computation for
+    every task it keeps or drops."""
+    from repro.core.simulator import _best_possible
+
+    trace = _trace_fn(cost)(6)[:40]
+    from repro.core.vdc import PodGrid
+    sim = Simulator(HEURISTICS["VPTR"], cost, grid=PodGrid(4, 4))
+    sim.begin()
+    for t in trace:
+        sim.inject(t)
+    mid = trace[20].arrival
+    sim.run_until(mid)
+    pend = sim.pending_tasks()
+    assert pend == sorted(pend, key=lambda t: t.arrival)
+    now = sim.now
+    for t in pend:      # survivors really are alive under the base rule
+        v, _, _ = _best_possible(t, cost, now,
+                                 max(t.ttype.allowable_chips))
+        assert v > 0.0
+    for t in trace:     # and every memo-dropped task is dead under it
+        if t.dropped:
+            v, _, _ = _best_possible(t, cost, now,
+                                     max(t.ttype.allowable_chips))
+            assert v <= 0.0
+    res = sim.finalize()
+    assert res.completed + res.dropped == len(trace)
+
+
 def test_elastic_regrow_gains_value(cost):
     from repro.core.elastic import plan_regrow
     from repro.core.vdc import PodGrid
