@@ -22,7 +22,8 @@ SURFACE = {
         "ServiceSLO", "KernelCalibrator", "calibrate_profiles",
         "RecordLedger", "ServiceLedger", "BridgeInfo", "EpochObservation",
         "analytics_cost_model", "single_site_fleet", "ScreeningModel",
-        "ScreenResult"),
+        "ScreenResult", "CalibrationLoop", "ServiceCalibration",
+        "ServiceCorrection"),
     "repro.placement": (
         "EdgeNode", "EdgeSpec", "LinkSpec", "NetworkModel", "PlacementPlan",
         "ServicePlacement", "CoSimConfig", "CoSimResult", "CoSimulator",

@@ -18,13 +18,14 @@ chosen schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.value import task_value
 from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
 from repro.scenario.engine import BridgeInfo, EpochObservation
+from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
 from repro.scenario.screen import q_factor
 
 
@@ -41,14 +42,24 @@ class ForecastResult:
 class ForecastModel:
     """Analytic plan scorer over a rate estimate; plugs into
     ``placement.search`` (it quacks like a CoSimulator: ``.topology`` +
-    ``.run(plan)``)."""
+    ``.run(plan)``).
+
+    ``corrections`` installs per-service calibration terms
+    (:class:`~repro.scenario.feedback.ServiceCorrection`): the raw
+    analytic latency is mapped through ``q_mult·lat + lat_bias_s`` and
+    the resulting value scaled by ``1 − drop_offset`` before ranking —
+    the closed half of the forecast-calibration loop. With no
+    corrections the model is bit-identical to the uncalibrated one."""
 
     def __init__(self, info: BridgeInfo, rates: Mapping[str, float],
-                 down: Optional[Mapping[str, bool]] = None):
+                 down: Optional[Mapping[str, bool]] = None,
+                 corrections: Optional[Mapping[str, ServiceCorrection]]
+                 = None):
         self.info = info
         self.topology = info.topology
         self.rates = dict(rates)
         self.down = dict(down or {})
+        self.corrections = dict(corrections or {})
         self._nodes = {s.name: EdgeNode(s.edge) for s in info.fleet.sites}
 
     # ------------------------------------------------------------- helpers
@@ -67,6 +78,19 @@ class ForecastModel:
 
     # ----------------------------------------------------------------- run
     def run(self, plan: PlacementPlan) -> ForecastResult:
+        return self._eval(plan)[0]
+
+    def predict(self, plan: PlacementPlan
+                ) -> Tuple[ForecastResult, Dict[str, Dict]]:
+        """Score plus per-service detail: the *raw* analytic latency
+        (``lat_s`` — what a calibration loop regresses realized
+        latencies against), the calibrated latency actually ranked with
+        (``lat_cal_s``), and the per-epoch VoS contribution under both
+        (``vos`` / ``vos_raw``)."""
+        return self._eval(plan, want_detail=True)
+
+    def _eval(self, plan: PlacementPlan, want_detail: bool = False
+              ) -> Tuple[ForecastResult, Dict[str, Dict]]:
         info = self.info
         order = list(self.topology)
         sites = info.fleet.site_names
@@ -74,7 +98,8 @@ class ForecastModel:
             plan.validate(self.topology, grid_chips=info.grid_chips,
                           sites=tuple(sites) + (SITE_DC,))
         except ValueError as e:
-            return ForecastResult(float("-inf"), False, plan.label, str(e))
+            return ForecastResult(float("-inf"), False, plan.label,
+                                  str(e)), {}
 
         # hard feasibility: down sites host nothing; RAM fits
         for name in sites:
@@ -83,12 +108,12 @@ class ForecastModel:
                 continue
             if self.down.get(name):
                 return ForecastResult(float("-inf"), False, plan.label,
-                                      f"site {name} is down")
+                                      f"site {name} is down"), {}
             spec = info.fleet.site(name).edge
             budget = sum(info.services[s].buffer_budget for s in placed)
             if spec.ram_required(budget) > spec.ram_bytes:
                 return ForecastResult(float("-inf"), False, plan.label,
-                                      f"site {name}: RAM")
+                                      f"site {name}: RAM"), {}
 
         # device utilization per site; shared-uplink serialization load
         util: Dict[str, float] = {}
@@ -158,6 +183,7 @@ class ForecastModel:
 
         vos = 0.0
         user = info.fleet.result_site
+        detail: Dict[str, Dict] = {}
         for s in order:
             i = info.services[s]
             prof = info.profiles[s]
@@ -188,9 +214,23 @@ class ForecastModel:
                        + dl)
                 energy = self._dc_steps(s) * info.cost.energy_per_step(
                     f"svc:{s}", "window", p.chips, p.dvfs_f)
-            v = task_value(prof.slo.value_spec(), lat, energy)
-            vos += v * (info.epoch_s / i.slide_s)
-        return ForecastResult(vos, True, plan.label)
+            corr = self.corrections.get(s)
+            if corr is not None:
+                corr = corr.tier(p.is_edge)
+            lat_cal = corr.latency(lat) if corr is not None else lat
+            vspec = prof.slo.value_spec()
+            v = task_value(vspec, lat_cal, energy)
+            if corr is not None:
+                v *= corr.keep_prob
+            fires = info.epoch_s / i.slide_s
+            vos += v * fires
+            if want_detail:
+                v_raw = (v if corr is None
+                         else task_value(vspec, lat, energy))
+                detail[s] = {"lat_s": lat, "lat_cal_s": lat_cal,
+                             "tier": "edge" if p.is_edge else "dc",
+                             "vos": v * fires, "vos_raw": v_raw * fires}
+        return ForecastResult(vos, True, plan.label), detail
 
     def _origin_site(self, svc: str, plan: PlacementPlan) -> str:
         """Dominant input-record origin: upstream's site if any upstream
@@ -255,11 +295,23 @@ class OnlineController:
 
     Every ``decide`` appends one regret-telemetry entry: the forecast
     VoS of the search's best plan, of the plan actually played
-    (hysteresis may keep the incumbent), and their gap
-    (``search_regret``). The engine merges the realized per-epoch co-sim
-    VoS into the same record (``cosim_vos`` / ``calibration_gap``) —
-    the measurement the ROADMAP's fleet-aware forecast calibration item
-    needs."""
+    (hysteresis may keep the incumbent), and their *signed* gap
+    (``search_regret`` — negative when tie-breaking kept an incumbent
+    the fresh search scored below). The engine merges the realized
+    per-epoch co-sim VoS into the same record (``cosim_vos`` /
+    ``calibration_gap``).
+
+    ``calibrate=True`` closes the forecast-calibration loop: a
+    :class:`~repro.scenario.feedback.CalibrationLoop` fits per-service
+    correction terms (queueing-inflation multiplier, network-latency
+    bias, drop-probability offset) by recursive least squares over the
+    engine's realized residuals (``EpochObservation.realized_window``)
+    paired with the raw forecasts this controller stored for the plans
+    it played, and every subsequent epoch's plan search ranks with the
+    corrected model. Telemetry then additionally records the raw
+    (uncorrected) forecast of the played plan (``chosen_vos_raw`` — the
+    engine derives ``calibration_gap_raw`` from it) and the corrections
+    in force."""
     charge_migrations = True
     label = "online"
 
@@ -267,19 +319,33 @@ class OnlineController:
                  dvfs_options: Sequence[float] = (1.0,),
                  window: int = 3, switch_margin: float = 0.05,
                  seed: int = 0,
-                 prior_rates: Optional[Mapping[str, float]] = None):
+                 prior_rates: Optional[Mapping[str, float]] = None,
+                 calibrate: bool = False,
+                 calibration: Optional[CalibrationLoop] = None):
         self.chips_options = tuple(chips_options)
         self.dvfs_options = tuple(dvfs_options)
         self.window = window
         self.switch_margin = switch_margin
         self.seed = seed
         self.prior_rates = dict(prior_rates) if prior_rates else None
+        self.calibrate = calibrate or calibration is not None
+        self.calibration = calibration
+        if self.calibrate:
+            self.label = "online-cal"
         self.current: Optional[PlacementPlan] = None
         self.telemetry: List[Dict] = []
 
     def bind(self, info: BridgeInfo) -> None:
         self.info = info
         self.telemetry = []   # bind() marks a run start: drop stale entries
+        self.current = None
+        self._pred: Dict[int, Dict[str, Dict]] = {}
+        self._observed_upto = 0
+        if self.calibrate:
+            if self.calibration is None:
+                self.calibration = CalibrationLoop(list(info.topology))
+            else:
+                self.calibration.reset()
 
     # ------------------------------------------------------------ estimate
     def _estimate(self, obs: EpochObservation) -> Dict[str, float]:
@@ -299,41 +365,73 @@ class OnlineController:
     def _down(self, obs: EpochObservation) -> Dict[str, bool]:
         return obs.down_now
 
+    # ---------------------------------------------------------- calibration
+    def _absorb_residuals(self, obs: EpochObservation) -> None:
+        """Feed each newly completed epoch's realized residuals (paired
+        with the raw forecast stored when that epoch's plan was chosen)
+        into the calibration loop — each epoch is observed exactly once,
+        at the first boundary after it completes."""
+        for e in range(self._observed_upto, len(obs.realized_window)):
+            pred = self._pred.pop(e, None)
+            if pred is not None:
+                self.calibration.observe(e, pred, obs.realized_window[e])
+        self._observed_upto = max(self._observed_upto,
+                                  len(obs.realized_window))
+
     # -------------------------------------------------------------- decide
     def decide(self, obs: EpochObservation) -> PlacementPlan:
         rates, down = self._rates(obs), self._down(obs)
-        model = ForecastModel(self.info, rates, down)
+        corr = None
+        if self.calibration is not None:
+            self._absorb_residuals(obs)
+            corr = self.calibration.corrections()
+        model = ForecastModel(self.info, rates, down, corrections=corr)
         up_sites = tuple(s for s in self.info.fleet.site_names
                          if not down.get(s))
         edge_sites = up_sites or self.info.fleet.site_names
         sr = search_placement(model, self.chips_options, self.dvfs_options,
                               seed=self.seed, edge_sites=edge_sites)
         best = sr.plan
-        new = model.run(best)
+        new, new_detail = model.predict(best)
         switched = True
         if self.current is None:
-            self.current, chosen = best, new
+            self.current, chosen, detail = best, new, new_detail
         else:
-            cur = model.run(self.current)
+            cur, cur_detail = model.predict(self.current)
             must_switch = not cur.feasible
             margin_ok = (new.feasible and cur.feasible
                          and new.vos > cur.vos * (1.0 + self.switch_margin)
                          + 1e-9)
             if must_switch or margin_ok:
-                self.current, chosen = best, new
+                self.current, chosen, detail = best, new, new_detail
             else:
-                chosen, switched = cur, False
-        self.telemetry.append({
+                chosen, detail, switched = cur, cur_detail, False
+        entry = {
             "epoch": obs.epoch,
             "best_vos": round(new.vos, 4) if new.feasible else None,
             "chosen_vos": round(chosen.vos, 4) if chosen.feasible else None,
-            "search_regret": round(max(0.0, new.vos - chosen.vos), 4)
+            # signed: hysteresis/tie-break can keep an incumbent the
+            # fresh search scores *below* (negative regret), which a
+            # max(0, .) here used to silently discard
+            "search_regret": round(new.vos - chosen.vos, 4)
             if new.feasible and chosen.feasible else None,
             "switched": switched,
             "search": {"method": sr.method, "evaluations": sr.evaluations,
                        "cache_hits": sr.cache_hits,
                        "cache_misses": sr.cache_misses},
-        })
+        }
+        if self.calibration is not None:
+            if chosen.feasible:
+                # raw forecast detail of the played plan (reused from
+                # the hysteresis evaluation): the pairing target for
+                # this epoch's realized residuals, and the raw-arm
+                # prediction the engine turns into calibration_gap_raw
+                self._pred[obs.epoch] = detail
+                entry["chosen_vos_raw"] = round(
+                    sum(d["vos_raw"] for d in detail.values()), 4)
+            entry["corrections"] = {
+                s: c.to_dict() for s, c in corr.items()}
+        self.telemetry.append(entry)
         return self.current
 
 

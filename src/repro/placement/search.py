@@ -256,19 +256,46 @@ def screened_search(cosim: CoSimulator,
                     enumerate_limit: int = 65536,
                     sample_budget: int = 2048,
                     climbers: int = 8,
-                    climb_rounds: int = 32) -> SearchResult:
+                    climb_rounds: int = 32,
+                    corrections=None) -> SearchResult:
     """Two-tier search: tier 1 scores candidates in vectorized batches
     on the screening model (the whole plan space when it enumerates
     under ``enumerate_limit``, else anchors + a seeded random sample
     refined by batched single-flip hill climbing on the screening
     surface); tier 2 runs the exact DES co-simulation only on the
     top-K screened survivors plus the anchor plans, which bounds the
-    damage of a screening mis-rank. Deterministic for a fixed seed."""
+    damage of a screening mis-rank. Deterministic for a fixed seed.
+
+    ``corrections`` (per-service forecast-calibration terms, see
+    :mod:`repro.scenario.feedback`) are installed on the screener for
+    the duration of this search — tier 1 then *ranks* with calibrated
+    latency/value terms — and the screener's previous state is restored
+    before returning. Tier 2 is the exact DES either way."""
     ev = evaluator or Evaluator(cosim)
     screener = ev.screener
     if screener is None:
         raise ValueError(f"{type(cosim).__name__} exposes no "
                          "screening_model; use exhaustive/greedy search")
+    prev_corr = (screener.set_corrections(corrections)
+                 if corrections is not None else None)
+    try:
+        return _screened_search(cosim, ev, screener, chips_options,
+                                dvfs_options, seed, top_k, edge_sites,
+                                enumerate_limit, sample_budget, climbers,
+                                climb_rounds,
+                                calibrated=corrections is not None)
+    finally:
+        if corrections is not None:
+            screener.set_corrections(prev_corr)
+
+
+def _screened_search(cosim, ev: Evaluator, screener,
+                     chips_options: Sequence[int],
+                     dvfs_options: Sequence[float], seed: int,
+                     top_k: Optional[int], edge_sites: Sequence[str],
+                     enumerate_limit: int, sample_budget: int,
+                     climbers: int, climb_rounds: int,
+                     calibrated: bool = False) -> SearchResult:
     hits0, misses0 = ev.hits, ev.misses
     names = list(screener.order)
     options = service_options(chips_options, dvfs_options, edge_sites)
@@ -351,6 +378,7 @@ def screened_search(cosim: CoSimulator,
         "survivors": len(survivors), "anchors": len(anchors),
         "screen_wall_s": round(screen_wall, 4),
         "agreement": bool(screen_best_key == best_plan.key()),
+        "calibrated": bool(calibrated),
     }
     return SearchResult(best_plan, best, method, ev.misses - misses0,
                         ev.history, screen=screen_stats,
@@ -366,7 +394,8 @@ def search_placement(cosim: CoSimulator,
                      evaluator: Optional[Evaluator] = None,
                      edge_sites: Sequence[str] = (SITE_EDGE,),
                      screen: Optional[bool] = None,
-                     top_k: Optional[int] = None) -> SearchResult:
+                     top_k: Optional[int] = None,
+                     corrections=None) -> SearchResult:
     """Front door. When the scorer can build a tier-1 screening model
     (the unified ``ScenarioEngine`` can; analytic scorers like the
     online ``ForecastModel`` cannot) the two-tier screened search is
@@ -375,14 +404,17 @@ def search_placement(cosim: CoSimulator,
     space fits under ``exhaustive_limit`` evaluations, greedy +
     hill-climb otherwise. ``edge_sites`` widens the per-service choice
     set to a multi-gateway fleet; the evaluator must understand those
-    site names."""
+    site names. ``corrections`` threads forecast-calibration state into
+    the tier-1 screen (ignored on the exact-only path, whose scorer —
+    e.g. a calibrated ``ForecastModel`` — carries its own)."""
     ev = evaluator or Evaluator(cosim)
     if screen is None:
         screen = ev.screener is not None
     if screen:
         return screened_search(cosim, chips_options, dvfs_options,
                                seed=seed, top_k=top_k, evaluator=ev,
-                               edge_sites=edge_sites)
+                               edge_sites=edge_sites,
+                               corrections=corrections)
     n_opts = len(edge_sites) + len(chips_options) * len(dvfs_options)
     space = n_opts ** len(cosim.topology)
     if space <= exhaustive_limit:

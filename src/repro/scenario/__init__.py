@@ -17,6 +17,10 @@ The public surface of the co-simulation stack:
                 truth for operator cost
   calibrate.py  KernelCalibrator — measure flops_per_record from Pallas
                 kernel dry-runs instead of declaring it
+  feedback.py   CalibrationLoop — closed-loop forecast calibration:
+                RLS-fitted per-service correction terms from realized
+                engine residuals, injected into ForecastModel and
+                ScreeningModel ranking
   ledger.py     exact record-conservation accounting shared by all runs
 
 Older entry points (``repro.placement.cosim.CoSimulator``,
@@ -34,4 +38,6 @@ from repro.scenario.spec import (FarmSpec, RateSpec, ScenarioBuilder,
                                  scenario)
 from repro.scenario.calibrate import (Calibration, KernelCalibrator,
                                       calibrate_profiles)
+from repro.scenario.feedback import (CalibrationLoop, ServiceCalibration,
+                                     ServiceCorrection)
 from repro.scenario.screen import ScreeningModel, ScreenResult

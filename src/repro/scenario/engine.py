@@ -165,7 +165,18 @@ class EpochObservation:
     """What a controller sees at an epoch boundary. ``*_oracle`` fields
     are ground truth about the *coming* epoch — only the clairvoyant
     baseline may read them; honest controllers plan from the observed
-    past (``rates_window``) and the instantaneous site health."""
+    past (``rates_window``) and the instantaneous site health.
+
+    ``realized_window`` is the engine's realized per-service residual
+    per *completed* epoch (oldest first): VoS earned so far, completed /
+    dropped / still-inflight fire counts and the mean realized fire
+    latency — the measurement a forecast-calibration loop
+    (:mod:`repro.scenario.feedback`) trains on. Like ``rates_window``
+    it is strictly about the past, so honest controllers may read it.
+    Each epoch's snapshot is *frozen* at the first boundary after the
+    epoch completes: fires still in flight there stay counted
+    ``inflight`` (their value is simply never attributed — a conscious
+    under-measurement that keeps the feed one-pass and deterministic)."""
     epoch: int
     t0: float
     t1: float
@@ -173,6 +184,8 @@ class EpochObservation:
     down_now: Dict[str, bool]
     rates_oracle: Dict[str, float]
     down_oracle: Dict[str, bool]
+    realized_window: List[Dict[str, Dict]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def rates_prev(self) -> Optional[Dict[str, float]]:
@@ -196,6 +209,7 @@ class _OFire:
     value: float = 0.0
     dropped: bool = False
     pending: bool = False
+    lat_s: Optional[float] = None   # settled realized latency (NaN: no sample)
     arrival_at: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
@@ -726,6 +740,63 @@ class ScenarioEngine:
             cursor = min(nxt)
             self._sim.run_until(cursor)
 
+    # ------------------------------------------------------- realized value
+    def _settle_value(self, svc: str, f: _OFire) -> None:
+        """Realized value + end-to-end latency of a terminal fire,
+        computed once and cached on the fire (the per-epoch realized
+        feedback and the final ``_score`` share the same numbers)."""
+        if f.lat_s is not None or not f.terminal:
+            return
+        if f.state == "done" and f.site != SITE_DC:
+            f.lat_s = f.ready_out - f.ts
+            f.value = task_value(self._vspec[svc], f.lat_s, f.energy_j)
+        elif f.state == "done":
+            f.value = self._task_by_key[(svc, f.idx)].earned
+            f.lat_s = f.ready_out + self._dl_user - f.ts
+        else:
+            f.lat_s = float("nan")      # dropped/starved: no latency sample
+
+    def _epoch_residuals(self, epoch: int) -> Dict[str, Dict]:
+        """Per-service realized residuals of one epoch as of the
+        current simulation time: the VoS earned, the terminal fire
+        counts (the per-service ledger residuals) and the mean realized
+        latency. Fires still in flight count as ``inflight`` with no
+        value realized."""
+        out = {s: {"vos": 0.0, "completed": 0, "dropped": 0,
+                   "inflight": 0, "lat_mean_s": float("nan"),
+                   "_lat_sum": 0.0}
+               for s in self.order}
+        for svc, f in self._fires_by_epoch.get(epoch, ()):
+            d = out[svc]
+            self._settle_value(svc, f)
+            if f.state == "done":
+                d["completed"] += 1
+                d["vos"] += f.value
+                d["_lat_sum"] += f.lat_s
+            elif f.dropped:
+                d["dropped"] += 1
+            else:
+                d["inflight"] += 1
+        for d in out.values():
+            if d["completed"]:
+                d["lat_mean_s"] = d["_lat_sum"] / d["completed"]
+            del d["_lat_sum"]
+            d["vos"] = round(d["vos"], 6)
+        return out
+
+    def _realized_upto(self, upto_epoch: int) -> List[Dict[str, Dict]]:
+        """Frozen residual snapshots for every epoch < ``upto``. Each
+        epoch is materialized exactly once, at the first boundary after
+        it completes, and never rescanned: fires that straddle that
+        boundary stay counted ``inflight`` in the snapshot (the
+        calibration loop reads each epoch exactly once anyway, and
+        freezing keeps the per-run cost at one pass over the fires
+        instead of one pass per boundary)."""
+        while len(self._realized) < upto_epoch:
+            self._realized.append(self._epoch_residuals(len(self._realized)))
+        return [{s: dict(d) for s, d in per.items()}
+                for per in self._realized[:upto_epoch]]
+
     # ------------------------------------------------------------------ run
     def run(self, controller) -> EngineResult:
         """Co-simulate one plan schedule: ``controller.decide`` is asked
@@ -734,6 +805,9 @@ class ScenarioEngine:
         pipe, staps, qtaps = self._ensure_driven()
         cfg = self.cfg
         self._fleet = Fleet(cfg.fleet, self.outages)
+        self._dl_user = self._fleet.downlink_time(cfg.fleet.result_site)
+        self._vspec = {s: self.profiles[s].slo.value_spec()
+                       for s in self.order}
         self._sim = Simulator(_fresh_heuristic(cfg.heuristic), self.cost,
                               power_cap_w=cfg.power_cap_w,
                               grid=PodGrid(*cfg.grid_shape))
@@ -745,6 +819,11 @@ class ScenarioEngine:
                   for i, fr in enumerate(staps[svc].fires)]
             for svc in self.order}
         self._ts = {s: [f.ts for f in fl] for s, fl in self._fires.items()}
+        self._fires_by_epoch: Dict[int, List[Tuple[str, _OFire]]] = {}
+        for svc, fl in self._fires.items():
+            for f in fl:
+                self._fires_by_epoch.setdefault(f.epoch, []).append((svc, f))
+        self._realized: List[Dict[str, Dict]] = []
         self._term = {s: 0 for s in self.order}
         self._disp = {s: 0 for s in self.order}
         self._equeue: List[Tuple] = []
@@ -767,6 +846,7 @@ class ScenarioEngine:
             obs = EpochObservation(
                 epoch=k, t0=t0, t1=t1,
                 rates_window=list(rates_window),
+                realized_window=self._realized_upto(k),
                 down_now={s: self._fleet.site(s).failed_at(t0)
                           for s in cfg.fleet.site_names},
                 rates_oracle=dict(true_rates[k]),
@@ -850,8 +930,6 @@ class ScenarioEngine:
                epoch_meta: List[Dict], n_migs: int,
                controller) -> EngineResult:
         cfg = self.cfg
-        dl_user = self._fleet.downlink_time(cfg.fleet.result_site)
-        task_by_key = self._task_by_key
         vos = max_vos = 0.0
         latencies: List[float] = []
         completed = dropped = inflight = 0
@@ -859,21 +937,14 @@ class ScenarioEngine:
         per_service: Dict[str, Dict] = {}
         for svc in self.order:
             prof = self.profiles[svc]
-            spec = prof.slo.value_spec()
             s_lat: List[float] = []
             s_done = s_drop = s_wait = 0
             for f in self._fires[svc]:
                 max_vos += prof.slo.max_value
-                if f.state == "done" and f.site != SITE_DC:
-                    lat = f.ready_out - f.ts
-                    f.value = task_value(spec, lat, f.energy_j)
+                self._settle_value(svc, f)
+                if f.state == "done":
                     s_done += 1
-                    s_lat.append(lat)
-                elif f.state == "done":
-                    task = task_by_key[(svc, f.idx)]
-                    f.value = task.earned
-                    s_done += 1
-                    s_lat.append(f.ready_out + dl_user - f.ts)
+                    s_lat.append(f.lat_s)
                 elif f.dropped:
                     s_drop += 1
                 else:
@@ -902,6 +973,12 @@ class ScenarioEngine:
                 # played plan minus what the co-sim realized this epoch
                 fc["cosim_vos"] = round(ep_vos[k], 4)
                 fc["calibration_gap"] = round(fc["chosen_vos"] - ep_vos[k], 4)
+                if fc.get("chosen_vos_raw") is not None:
+                    # calibrated controllers also report the *raw*
+                    # (uncorrected) forecast of the played plan, so one
+                    # run carries its own calibrated-vs-raw comparison
+                    fc["calibration_gap_raw"] = round(
+                        fc["chosen_vos_raw"] - ep_vos[k], 4)
 
         ledger, per_site = self._ledger(pipe, staps, qtaps)
         lat = (np.asarray(latencies) if latencies

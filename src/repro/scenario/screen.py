@@ -83,9 +83,20 @@ class ScreeningModel:
     sequence of plans to screened VoS estimates; ``score_matrix`` is
     the allocation-free core for index-matrix candidates (what the
     sampled / hill-climbing search uses on large fleets).
+
+    ``set_corrections`` installs per-service forecast-calibration terms
+    (:class:`~repro.scenario.feedback.ServiceCorrection`, duck-typed:
+    ``q_mult`` / ``lat_bias_s`` / ``drop_offset``): each service's
+    per-fire latency matrix is mapped through ``q_mult·lat + bias`` and
+    its value scaled by ``1 − drop_offset`` before summation, so tier-1
+    ranking uses the same calibrated terms as the online controller's
+    ``ForecastModel`` — ``screened_search`` threads them through per
+    search and restores the previous state afterwards. With no
+    corrections installed the scores are bit-identical to the
+    uncalibrated model.
     """
 
-    def __init__(self, engine):
+    def __init__(self, engine, corrections=None):
         engine._ensure_driven()
         _, staps, _ = engine._driven
         cfg = engine.cfg
@@ -127,6 +138,15 @@ class ScreeningModel:
                 "slide": float(info.slide_s),
             }
         self._opt_cache: Dict[Tuple, _OptionData] = {}
+        self._corr: Dict[str, object] = dict(corrections or {})
+
+    def set_corrections(self, corrections) -> Dict[str, object]:
+        """Install (or with ``None`` clear) per-service calibration
+        corrections; returns the previously installed mapping so a
+        caller can restore it."""
+        prev = self._corr
+        self._corr = dict(corrections or {})
+        return prev
 
     # ------------------------------------------------------ option tables
     def _opt(self, svc: str, p: ServicePlacement) -> _OptionData:
@@ -304,6 +324,7 @@ class ScreeningModel:
                     d_m = m & (dst < 0)
                     if d_m.any():
                         haul[d_m] += leg[dst[m] < 0]
+            cal = self._corr.get(s)
             for o in np.unique(col):
                 mask = col == o
                 d = self._opt(s, options[o])
@@ -316,11 +337,19 @@ class ScreeningModel:
                     lat = (haul[mask]
                            + d.dur[None, :] * dc_over[mask, None]
                            + self.dl_user_s)
+                corr = cal.tier(j >= 0) if cal is not None else None
+                if corr is not None:
+                    # calibrated latency (same per-service, per-tier map
+                    # as the online ForecastModel; never negative)
+                    lat = np.maximum(
+                        corr.q_mult * lat + corr.lat_bias_s, 0.0)
                 v_p = spec.perf_curve.value_array(lat)
                 v = np.where((v_p > 0.0) & (d.v_e[None, :] > 0.0),
                              spec.gamma * (spec.w_p * v_p
                                            + spec.w_e * d.v_e[None, :]),
                              0.0)
+                if corr is not None and corr.drop_offset > 0.0:
+                    v = v * max(0.0, 1.0 - corr.drop_offset)
                 vos[mask] += v.sum(axis=1)
         vos[~feasible] = float("-inf")
         return vos

@@ -1,0 +1,389 @@
+"""Closed-loop forecast calibration (repro.scenario.feedback): RLS
+fitting, deadbands and staleness decay; correction injection into
+ForecastModel and ScreeningModel ranking; the engine's realized-residual
+feed (EpochObservation.realized_window); CalibrationLoop determinism
+(same spec + seed -> identical correction history); the *signed*
+search-regret telemetry (both signs); and the golden-regression pin of
+the BENCH_online.json telemetry schema."""
+import json
+import math
+import os
+
+import pytest
+
+from repro.online import (OnlineController, StaticController, ForecastModel)
+from repro.pipeline import (Broker, Pipeline, ServiceConfig, StreamService,
+                            WindowSpec)
+from repro.online.drift import DriftingFarm, step_bursts
+from repro.online.fleet import FleetSpec, SiteSpec
+from repro.placement import PlacementPlan
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.placement.search import Evaluator, search_placement
+from repro.scenario import (CalibrationLoop, EngineConfig, EpochObservation,
+                            RateSpec, ScenarioEngine, ServiceCalibration,
+                            ServiceCorrection, ServiceProfile, ServiceSLO,
+                            scenario)
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SLO = ServiceSLO(soft_latency_s=2.0, hard_latency_s=10.0,
+                  soft_energy_j=0.3, hard_energy_j=3.0)
+
+
+# ---------------------------------------------------------------- RLS core
+def test_rls_fits_persistent_linear_error():
+    """Feeding y = 2x + 1 repeatedly converges the latency terms onto
+    the line (clamps permitting) — the loop learns a persistent bias."""
+    loop = CalibrationLoop(["svc"], stale_decay=1.0)
+    for k, x in enumerate([1.0, 2.0, 1.5, 2.5, 1.0, 2.0, 1.5, 2.5] * 3):
+        loop.observe(k, {"svc": {"tier": "edge", "lat_s": x}},
+                     {"svc": {"lat_mean_s": 2.0 * x + 1.0, "completed": 5,
+                              "dropped": 0, "inflight": 0, "vos": 1.0}})
+    c = loop.correction("svc").edge
+    assert c.q_mult == pytest.approx(2.0, rel=0.25)
+    assert c.latency(2.0) == pytest.approx(5.0, rel=0.2)
+    # the DC tier never learned anything: still identity
+    assert loop.correction("svc").dc.is_identity
+
+
+def test_deadband_keeps_identity_on_small_error():
+    """A well-calibrated forecast (realized ~= predicted) must produce
+    *exactly* identity corrections, not epsilon perturbations."""
+    loop = CalibrationLoop(["svc"])
+    for k in range(8):
+        loop.observe(k, {"svc": {"tier": "edge", "lat_s": 1.0}},
+                     {"svc": {"lat_mean_s": 1.05, "completed": 5,
+                              "dropped": 0, "inflight": 0, "vos": 1.0}})
+    assert loop.correction("svc").edge.is_identity
+
+
+def test_drop_offset_learns_and_decays_when_stale():
+    """A DC drop storm drives drop_offset up fast; epochs that stop
+    playing the DC tier decay it back toward identity (re-exploration)."""
+    loop = CalibrationLoop(["svc"])
+    loop.observe(0, {"svc": {"tier": "dc", "lat_s": 1.0}},
+                 {"svc": {"lat_mean_s": float("nan"), "completed": 0,
+                          "dropped": 10, "inflight": 0, "vos": 0.0}})
+    d0 = loop.correction("svc").dc.drop_offset
+    assert d0 > 0.5
+    # service now plays (and observes) the edge tier only
+    for k in range(1, 8):
+        loop.observe(k, {"svc": {"tier": "edge", "lat_s": 1.0}},
+                     {"svc": {"lat_mean_s": 1.0, "completed": 5,
+                              "dropped": 0, "inflight": 0, "vos": 1.0}})
+    assert loop.correction("svc").dc.drop_offset < d0
+    assert loop.correction("svc").dc.drop_offset == 0.0  # under deadband
+
+
+def test_correction_latency_map_and_tiers():
+    c = ServiceCorrection(q_mult=2.0, lat_bias_s=1.0, drop_offset=0.25)
+    assert c.latency(3.0) == 7.0
+    assert c.latency(-10.0) == 0.0          # clamped at zero
+    assert c.keep_prob == 0.75
+    assert c.tier(True) is c and c.tier(False) is c   # flat: both tiers
+    cal = ServiceCalibration(edge=ServiceCorrection(q_mult=1.5), dc=c)
+    assert cal.tier(True).q_mult == 1.5
+    assert cal.tier(False) is c
+    d = cal.to_dict()
+    assert set(d) == {"edge", "dc"}
+    assert set(d["dc"]) == {"q_mult", "lat_bias_s", "drop_offset"}
+
+
+# ----------------------------------------------------- forecast injection
+def _mini_engine(horizon=900.0, epoch_s=300.0):
+    def build():
+        b = Broker()
+        pipe = Pipeline(b)
+        pipe.add_farm(DriftingFarm(b, step_bursts(2.0, 10.0,
+                                                  [(300.0, 600.0)]),
+                                   n_things=4, seed=3))
+        agg = StreamService(ServiceConfig(
+            name="agg", queue="neubotspeed", column="download_speed",
+            agg="max", window=WindowSpec("sliding", 120.0, 30.0)), b)
+        smooth = StreamService(ServiceConfig(
+            name="smooth", queue="agg_out", column="value", agg="mean",
+            window=WindowSpec("sliding", 120.0, 60.0)), b)
+        pipe.add_service(agg).add_service(smooth)
+        pipe.connect(agg, "agg_out")
+        return pipe
+    profiles = {"agg": ServiceProfile(_SLO, flops_per_record=2e3),
+                "smooth": ServiceProfile(_SLO, flops_per_record=2e3)}
+    fleet = FleetSpec(sites=(
+        SiteSpec("gw-a", EdgeSpec(name="gw-a"), LinkSpec(),
+                 farm_queues=("neubotspeed",)),
+        SiteSpec("gw-b", EdgeSpec(name="gw-b", flops_per_s=10e9,
+                                  throughput_rps=800.0),
+                 LinkSpec(uplink_bps=10e6))))
+    cfg = EngineConfig(fleet=fleet, horizon_s=horizon, epoch_s=epoch_s)
+    return ScenarioEngine(build, profiles, cfg)
+
+
+NAMES = ["agg", "smooth"]
+
+
+def test_forecast_model_corrections_change_ranking_per_tier():
+    """A large DC drop_offset must tax DC placements (only) in the
+    forecast score; identity corrections reproduce the raw score
+    bit-for-bit."""
+    cs = _mini_engine()
+    info = cs.info()
+    rates = {"agg": 8.0, "smooth": 0.03}
+    raw = ForecastModel(info, rates)
+    ident = ForecastModel(info, rates,
+                          corrections={s: ServiceCalibration()
+                                       for s in NAMES})
+    taxed = ForecastModel(info, rates, corrections={
+        "agg": ServiceCalibration(dc=ServiceCorrection(drop_offset=0.9)),
+        "smooth": ServiceCalibration()})
+    edge = PlacementPlan.all_edge(NAMES, site="gw-a")
+    dc = PlacementPlan.all_dc(NAMES, chips=4)
+    assert ident.run(edge).vos == raw.run(edge).vos
+    assert ident.run(dc).vos == raw.run(dc).vos
+    assert taxed.run(edge).vos == raw.run(edge).vos      # edge untouched
+    assert taxed.run(dc).vos < raw.run(dc).vos           # DC taxed
+    res, detail = taxed.predict(dc)
+    assert set(detail) == set(NAMES)
+    assert detail["agg"]["tier"] == "dc"
+    assert detail["agg"]["vos_raw"] > detail["agg"]["vos"]
+    assert res.vos == pytest.approx(sum(d["vos"] for d in detail.values()))
+
+
+def test_screening_model_corrections_and_search_threading():
+    """score_batch applies tier-resolved corrections; screened_search
+    installs them for the search and restores the screener's previous
+    state afterwards."""
+    cs = _mini_engine()
+    screener = cs.screening_model()
+    edge = PlacementPlan.all_edge(NAMES, site="gw-a")
+    dc = PlacementPlan.all_dc(NAMES, chips=4)
+    base = screener.score_batch([edge, dc])
+    corr = {"agg": ServiceCalibration(dc=ServiceCorrection(drop_offset=0.9)),
+            "smooth": ServiceCalibration()}
+    prev = screener.set_corrections(corr)
+    assert prev == {}
+    taxed = screener.score_batch([edge, dc])
+    assert taxed[0] == base[0]                      # edge plan untouched
+    assert taxed[1] < base[1]                       # DC plan taxed
+    screener.set_corrections(prev)
+    assert (screener.score_batch([edge, dc]) == base).all()
+
+    ev = Evaluator(cs)
+    sr = search_placement(cs, chips_options=(4,), evaluator=ev,
+                          edge_sites=("gw-a", "gw-b"), corrections=corr)
+    assert sr.screen is not None and sr.screen["calibrated"] is True
+    assert screener._corr == {}                     # restored after search
+    sr2 = search_placement(cs, chips_options=(4,), evaluator=ev,
+                           edge_sites=("gw-a", "gw-b"))
+    assert sr2.screen["calibrated"] is False
+    # tier 2 is exact DES either way: both searches return DES-verified
+    # plans, and the calibrated tier-1 cannot make the result *worse*
+    # than the anchors
+    assert sr.result.vos >= min(ev(PlacementPlan.all_edge(NAMES,
+                                                          site="gw-a")).vos,
+                                ev(PlacementPlan.all_dc(NAMES,
+                                                        chips=4)).vos)
+
+
+# -------------------------------------------------- engine realized window
+class _Recorder(StaticController):
+    def __init__(self, plan):
+        super().__init__(plan, label="rec")
+        self.obs = []
+
+    def decide(self, obs):
+        self.obs.append(obs)
+        return self.plan
+
+
+def test_engine_realized_window_residuals():
+    """Every epoch boundary exposes per-service realized residuals for
+    all completed epochs: counts partition the epoch's fires, VoS and
+    mean latency come from settled fires only."""
+    cs = _mini_engine()
+    ctrl = _Recorder(PlacementPlan.all_edge(NAMES, site="gw-a"))
+    res = cs.run(ctrl)
+    assert [len(o.realized_window) for o in ctrl.obs] == [0, 1, 2]
+    for o in ctrl.obs:
+        for per in o.realized_window:
+            assert set(per) == set(NAMES)
+            for svc, d in per.items():
+                assert set(d) == {"vos", "completed", "dropped", "inflight",
+                                  "lat_mean_s"}
+                assert d["completed"] >= 0 and d["dropped"] >= 0
+                if d["completed"]:
+                    assert math.isfinite(d["lat_mean_s"])
+                else:
+                    assert d["vos"] == 0.0
+    # all-edge 3-epoch run: epoch 0 fires are settled by the epoch-1
+    # boundary, and their realized VoS matches the final epoch meta
+    e0 = ctrl.obs[1].realized_window[0]
+    assert sum(d["vos"] for d in e0.values()) == pytest.approx(
+        res.summary()["epochs"][0]["vos"], abs=1e-3)
+
+
+# ----------------------------------------------------------- determinism
+def test_calibration_loop_determinism():
+    """Same spec + seed -> bit-identical correction history and VoS
+    across two fresh engines (the golden determinism regression)."""
+    def run():
+        spec = (scenario("det")
+                .horizon(900.0).epochs(300.0)
+                .farm(n_things=4, seed=3,
+                      rate=RateSpec.bursts(2.0, 10.0, [(300.0, 600.0)]))
+                .service("agg", queue="neubotspeed",
+                         column="download_speed", agg="max",
+                         width_s=120, slide_s=30)
+                .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+                     soft_energy_j=0.3, hard_energy_j=3.0)
+                .profile(flops_per_record=2e3)
+                .build())
+        cs = spec.compile()
+        ctrl = OnlineController(chips_options=(4,), window=1,
+                                switch_margin=0.02, seed=0,
+                                prior_rates={"agg": 8.0}, calibrate=True)
+        res = cs.run(ctrl)
+        return res.vos, ctrl.calibration.history, ctrl.telemetry
+
+    v1, h1, t1 = run()
+    v2, h2, t2 = run()
+    assert v1 == v2
+    assert h1 == h2
+    assert t1 == t2
+    assert len(h1) >= 1           # the loop actually observed epochs
+
+
+def test_calibrated_controller_label_and_reset():
+    ctrl = OnlineController(calibrate=True)
+    assert ctrl.label == "online-cal"
+    assert OnlineController().label == "online"
+    loop = CalibrationLoop(["agg"])
+    loop.observe(0, {"agg": {"tier": "edge", "lat_s": 1.0}},
+                 {"agg": {"lat_mean_s": 9.0, "completed": 3, "dropped": 0,
+                          "inflight": 0, "vos": 0.0}})
+    assert loop.observations == 1
+    ctrl2 = OnlineController(calibration=loop)
+    assert ctrl2.calibrate and ctrl2.label == "online-cal"
+    cs = _mini_engine()
+    ctrl2.bind(cs.info())          # bind marks a run start: loop resets
+    assert loop.observations == 0 and loop.history == []
+
+
+# ------------------------------------------------------ signed search regret
+def _obs(epoch, rates, down=False):
+    d = {"gw-a": down, "gw-b": down}
+    return EpochObservation(epoch=epoch, t0=epoch * 300.0,
+                            t1=(epoch + 1) * 300.0,
+                            rates_window=[dict(rates)] if rates else [],
+                            down_now=d, rates_oracle={}, down_oracle=d)
+
+
+def test_search_regret_records_both_signs():
+    """The telemetry keeps the *signed* forecast regret: zero when the
+    searched best is adopted, positive when hysteresis keeps a
+    worse-scoring incumbent, and negative when the searched space no
+    longer contains the incumbent and its best scores below it. (Both
+    gateways are reported down, so only DC plans are feasible; in this
+    fabric the forecast scores dc[4] above dc[8].)"""
+    cs = _mini_engine()
+    info = cs.info()
+    rates = {"agg": 8.0, "smooth": 0.03}
+
+    ctrl = OnlineController(chips_options=(4,), window=1,
+                            switch_margin=10.0, seed=0, prior_rates=rates)
+    ctrl.bind(info)
+    plan0 = ctrl.decide(_obs(0, None, down=True))   # adopt: regret == 0
+    assert all(not p.is_edge and p.chips == 4
+               for p in plan0.assignments.values())
+    assert ctrl.telemetry[-1]["search_regret"] == 0.0
+    assert ctrl.telemetry[-1]["switched"]
+
+    # widen to chips=8 only: the best reachable plan (dc[8]) scores
+    # BELOW the kept dc[4] incumbent -> negative regret, recorded signed
+    ctrl.chips_options = (8,)
+    ctrl.decide(_obs(1, rates, down=True))
+    e1 = ctrl.telemetry[-1]
+    assert not e1["switched"]
+    assert e1["best_vos"] < e1["chosen_vos"]
+    assert e1["search_regret"] < 0.0
+    assert e1["search_regret"] == pytest.approx(
+        e1["best_vos"] - e1["chosen_vos"], abs=2e-4)
+
+    # the mirror image: a dc[8] incumbent, search re-widened to chips=4
+    # finds a better plan but the huge switch margin keeps the
+    # incumbent -> positive regret
+    ctrl2 = OnlineController(chips_options=(8,), window=1,
+                             switch_margin=10.0, seed=0, prior_rates=rates)
+    ctrl2.bind(info)
+    plan0 = ctrl2.decide(_obs(0, None, down=True))
+    assert all(not p.is_edge and p.chips == 8
+               for p in plan0.assignments.values())
+    ctrl2.chips_options = (4,)
+    ctrl2.decide(_obs(1, rates, down=True))
+    e1 = ctrl2.telemetry[-1]
+    assert not e1["switched"]
+    assert e1["best_vos"] > e1["chosen_vos"]
+    assert e1["search_regret"] > 0.0
+    assert e1["search_regret"] == pytest.approx(
+        e1["best_vos"] - e1["chosen_vos"], abs=2e-4)
+
+
+# --------------------------------------------------- golden report schema
+_FORECAST_KEYS = {"epoch", "best_vos", "chosen_vos", "search_regret",
+                  "switched", "search", "cosim_vos", "calibration_gap"}
+_SEARCH_KEYS = {"method", "evaluations", "cache_hits", "cache_misses"}
+_REGRET_KEYS = {"epochs_with_telemetry", "mean_search_regret",
+                "mean_calibration_gap"}
+_CAL_KEYS = {"mean_abs_gap_raw", "mean_abs_gap_calibrated",
+             "oracle_regret_raw", "oracle_regret_calibrated",
+             "gap_shrinks", "regret_shrinks"}
+_ACC_KEYS = {"online_beats_best_static", "within_10pct_of_oracle",
+             "ledger_conserved", "per_site_ledger_exact", "deterministic",
+             "calibration_gap_shrinks", "calibration_regret_shrinks"}
+_CORR_KEYS = {"q_mult", "lat_bias_s", "drop_offset"}
+
+
+def test_bench_online_report_schema_golden():
+    """Golden regression for the BENCH_online.json telemetry schema:
+    report consumers key on these exact field names — renaming or
+    dropping any of them must fail loudly here, not silently downstream."""
+    path = os.path.join(_ROOT, "BENCH_online.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_online.json not generated")
+    with open(path) as f:
+        report = json.load(f)
+    assert {"smoke", "scenarios", "acceptance"} <= set(report)
+    assert {"beats_best_static", "within_oracle", "calibration_improves",
+            "of", "pass"} <= set(report["acceptance"])
+    assert report["acceptance"]["pass"] is True
+    assert len(report["scenarios"]) >= 5      # 3 recorded + 2 drift (ISSUE 5)
+    assert {"correlated_bursts", "ramp_outage"} <= set(report["scenarios"])
+    for name, sc in report["scenarios"].items():
+        assert {"spec", "statics", "best_static", "online",
+                "online_calibrated", "oracle", "search_stats",
+                "forecast_regret", "forecast_regret_calibrated",
+                "calibration", "acceptance"} <= set(sc), name
+        assert _REGRET_KEYS == set(sc["forecast_regret"])
+        assert _REGRET_KEYS == set(sc["forecast_regret_calibrated"])
+        assert _CAL_KEYS == set(sc["calibration"])
+        assert _ACC_KEYS == set(sc["acceptance"])
+        assert {"epochs", "evaluations", "cache_hits",
+                "cache_misses"} == set(sc["search_stats"])
+        for arm, extra in (("online", set()),
+                           ("online_calibrated",
+                            {"chosen_vos_raw", "calibration_gap_raw",
+                             "corrections"})):
+            for e in sc[arm]["epochs"]:
+                fc = e.get("forecast")
+                assert fc is not None, (name, arm, e["epoch"])
+                assert _FORECAST_KEYS <= set(fc)
+                assert _SEARCH_KEYS == set(fc["search"])
+                assert extra <= set(fc), (name, arm, e["epoch"])
+                for tiers in fc.get("corrections", {}).values():
+                    assert set(tiers) == {"edge", "dc"}
+                    for c in tiers.values():
+                        assert set(c) == _CORR_KEYS
+        # both per-scenario calibration gates held when this report
+        # was generated (ISSUE 5 acceptance)
+        assert sc["calibration"]["gap_shrinks"] is True, name
+        assert sc["calibration"]["regret_shrinks"] is True, name

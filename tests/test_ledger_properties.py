@@ -1,0 +1,121 @@
+"""Property-based conservation tests for the shared record ledger
+(repro.scenario.ledger): for random small specs and placement plans,
+records in == records out + drops + in-flight at *every* cut of the
+pipeline — per service (broker -> fetch -> coverage partition) and per
+site (the processed roll-up partitions across gateways + DC)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
+from hypothesis import given, settings, strategies as st
+
+from repro.placement import PlacementPlan, ServicePlacement
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, scenario
+
+_SLO_KW = dict(soft_latency_s=2.0, hard_latency_s=10.0,
+               soft_energy_j=0.5, hard_energy_j=10.0)
+
+_WINDOWS = [(60.0, 30.0), (120.0, 60.0), (90.0, 45.0)]
+
+
+@st.composite
+def _case(draw):
+    """A small random scenario spec + a random placement plan over it."""
+    n_sites = draw(st.integers(1, 2))
+    sites = ["gw-a", "gw-b"][:n_sites]
+    shared = draw(st.booleans())        # second service shares the queue
+    chain = draw(st.booleans())         # add a downstream consumer
+    rate = draw(st.sampled_from([1.0, 2.5, 4.0]))
+    bursty = draw(st.booleans())
+    n_things = draw(st.integers(1, 3))
+    budgets = draw(st.lists(st.sampled_from([64, 256, 4096]),
+                            min_size=3, max_size=3))
+    widths = [draw(st.sampled_from(_WINDOWS)) for _ in range(3)]
+    store_on = draw(st.booleans())
+    seed = draw(st.integers(0, 10))
+
+    b = scenario("ledger-prop").horizon(180.0)
+    for s in sites:
+        b.site(s, edge=EdgeSpec(name=s),
+               link=LinkSpec(uplink_bps=2e5, record_bytes=128.0))
+    r = (RateSpec.bursts(rate, rate * 4.0, [(60.0, 120.0)]) if bursty
+         else RateSpec.constant(rate))
+    b.farm(n_things=n_things, seed=seed, rate=r, site=sites[0])
+
+    names = ["svc0"]
+    (b.service("svc0", queue="neubotspeed", column="download_speed",
+               agg="max", width_s=widths[0][0], slide_s=widths[0][1],
+               buffer_budget=budgets[0])
+     .slo(**_SLO_KW).profile(flops_per_record=2e3))
+    if store_on:
+        b.with_store(chunk_seconds=60.0, edge_budget_chunks=2)
+    if shared:
+        names.append("svc1")
+        (b.service("svc1", queue="neubotspeed", column="latency_ms",
+                   agg="mean", width_s=widths[1][0], slide_s=widths[1][1],
+                   buffer_budget=budgets[1])
+         .slo(**_SLO_KW).profile(flops_per_record=2e3))
+    if chain:
+        names.append("tail")
+        (b.service("tail", queue="svc0_out", column="value", agg="mean",
+                   width_s=widths[2][0], slide_s=widths[2][1],
+                   buffer_budget=budgets[2])
+         .fed_by("svc0")
+         .slo(**_SLO_KW).profile(flops_per_record=2e3))
+    spec = b.build()
+
+    options = [ServicePlacement(s) for s in sites]
+    options.append(ServicePlacement("dc", chips=4))
+    plan = PlacementPlan({n: draw(st.sampled_from(options)) for n in names})
+    return spec, plan
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=_case())
+def test_ledger_conserves_at_every_cut(case):
+    from repro.online import StaticController
+    spec, plan = case
+    res = spec.compile().run(StaticController(plan))
+    ledger = res.ledger
+    assert ledger.conserved()
+    for name, sl in ledger.services.items():
+        # cut 1: the broker queue — everything published either
+        # overflowed, is still unread, or was fetched
+        assert sl.produced == sl.overflow + sl.unread + sl.fetched, name
+        # cut 2: the service buffer — everything fetched is covered by
+        # a fire, still buffered, or was evicted (spilled or lost)
+        assert sl.fetched == (sl.covered + sl.buffered + sl.evicted_stored
+                              + sl.evicted_lost), name
+        # cut 3: fire outcomes partition the covered records
+        assert sl.covered == (sl.processed_edge + sl.processed_dc
+                              + sl.dropped_dc + sl.inflight_dc), name
+        # derived buckets stay consistent with the partition
+        assert sl.dropped == sl.overflow + sl.dropped_dc + sl.evicted_lost
+        assert sl.in_flight == (sl.unread + sl.buffered + sl.inflight_dc
+                                + sl.evicted_stored)
+        for k in ("produced", "overflow", "unread", "fetched",
+                  "processed_edge", "processed_dc", "dropped_dc",
+                  "inflight_dc", "buffered", "evicted_stored",
+                  "evicted_lost"):
+            assert getattr(sl, k) >= 0, (name, k)
+
+    # per-site cut: the processed roll-up partitions exactly across
+    # gateways + DC — no record is attributed to two sites or none
+    tot = ledger.totals()
+    site_sum = sum(d.get("records_processed", 0)
+                   for d in res.per_site.values())
+    assert site_sum == tot["processed_edge"] + tot["processed_dc"]
+    # fires partition too
+    assert res.fires_total == (res.fires_completed + res.fires_dropped
+                               + res.fires_inflight)
+
+
+@settings(max_examples=8, deadline=None)
+@given(case=_case())
+def test_ledger_deterministic_across_runs(case):
+    """One spec + plan -> bit-identical ledgers on fresh engines."""
+    spec, plan = case
+    t1 = spec.compile().run_plan(plan).ledger.totals()
+    t2 = spec.compile().run_plan(plan).ledger.totals()
+    assert t1 == t2

@@ -1,0 +1,151 @@
+"""Property-based tests for the tier-1 vectorized plan screen
+(repro.scenario.screen.ScreeningModel): score_batch purity, permutation
+invariance over plan batches, and monotonicity — inflating a service's
+record rate (its per-fire trace counts) or a link's latency never
+*increases* a DC-offloaded plan's screened score."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't crash collection
+from hypothesis import given, settings, strategies as st
+
+from repro.placement import PlacementPlan, ServicePlacement
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, ScenarioSpec, ScreeningModel, scenario
+
+_SLO_KW = dict(soft_latency_s=2.0, hard_latency_s=10.0,
+               soft_energy_j=0.5, hard_energy_j=10.0)
+
+
+def _spec(rtt_mult: float = 1.0, uplink_div: float = 1.0) -> ScenarioSpec:
+    """Two heterogeneous gateways + chained services on a short horizon
+    (the drive is link-independent, so link knobs rescale latency only)."""
+    return (scenario("screen-prop")
+            .horizon(240.0)
+            .site("gw-a", edge=EdgeSpec(name="gw-a"),
+                  link=LinkSpec(uplink_bps=1e5 / uplink_div,
+                                rtt_s=0.05 * rtt_mult, record_bytes=256.0))
+            .site("gw-b", edge=EdgeSpec(name="gw-b", flops_per_s=15e9),
+                  link=LinkSpec(uplink_bps=8e4 / uplink_div,
+                                rtt_s=0.08 * rtt_mult, record_bytes=256.0))
+            .farm(n_things=4, seed=5, rate=RateSpec.constant(4.0),
+                  site="gw-a")
+            .service("agg", queue="neubotspeed", column="download_speed",
+                     agg="max", width_s=60, slide_s=30)
+            .slo(**_SLO_KW).profile(flops_per_record=2e3)
+            .service("smooth", queue="agg_out", column="value", agg="mean",
+                     width_s=120, slide_s=60)
+            .fed_by("agg")
+            .slo(**_SLO_KW).profile(flops_per_record=2e3)
+            .build())
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return _spec().compile()
+
+
+def _plans(names):
+    """A diverse fixed plan batch over both gateways and the DC."""
+    return [
+        PlacementPlan.all_edge(names, site="gw-a"),
+        PlacementPlan.all_edge(names, site="gw-b"),
+        PlacementPlan.all_dc(names, chips=4),
+        PlacementPlan.all_dc(names, chips=8),
+        PlacementPlan({"agg": ServicePlacement("gw-a"),
+                       "smooth": ServicePlacement("dc", chips=4)}),
+        PlacementPlan({"agg": ServicePlacement("dc", chips=4),
+                       "smooth": ServicePlacement("gw-b")}),
+    ]
+
+
+# ------------------------------------------------------------------ purity
+def test_score_batch_is_pure(engine):
+    """Scoring is stateless: repeated batch scoring is bit-identical,
+    and batch scores equal one-by-one scores."""
+    plans = _plans(list(engine.order))
+    s1 = engine.screening_model().score_batch(plans)
+    s2 = engine.screening_model().score_batch(plans)
+    assert (s1 == s2).all()
+    singles = np.array([float(engine.screening_model().score_batch([p])[0])
+                        for p in plans])
+    assert s1 == pytest.approx(singles)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_score_batch_permutation_invariance(engine, seed):
+    """A plan's screened score does not depend on its batch position or
+    companions: scores commute with any permutation of the batch."""
+    plans = _plans(list(engine.order))
+    base = engine.screening_model().score_batch(plans)
+    perm = np.random.default_rng(seed).permutation(len(plans))
+    shuffled = engine.screening_model().score_batch(
+        [plans[i] for i in perm])
+    assert shuffled == pytest.approx(base[perm])
+
+
+# ------------------------------------------------------------ monotonicity
+def _inflate_rate(engine, svc: str, factor: float) -> ScreeningModel:
+    """A fresh screener whose trace pretends ``svc``'s record rate was
+    ``factor``x: every per-fire window size and per-origin newly-covered
+    count scales up (what a hotter farm produces for the same fires)."""
+    m = ScreeningModel(engine)
+    sv = m._svc[svc]
+    sv["nw"] = sv["nw"] * factor
+    sv["origins"] = {k: v * factor for k, v in sv["origins"].items()}
+    return m
+
+
+@settings(max_examples=25, deadline=None)
+@given(factor=st.floats(1.0, 8.0),
+       svc_idx=st.integers(0, 1),
+       chips=st.sampled_from([4, 8]))
+def test_rate_inflation_never_raises_dc_score(engine, factor, svc_idx, chips):
+    """More records can only mean longer DC steps, more uplink bytes and
+    more energy: a DC-offloaded plan's screened score is monotone
+    non-increasing in any service's record rate."""
+    names = list(engine.order)
+    svc = names[svc_idx]
+    plan = PlacementPlan.all_dc(names, chips=chips)
+    base = float(ScreeningModel(engine).score_batch([plan])[0])
+    inflated = float(_inflate_rate(engine, svc, factor)
+                     .score_batch([plan])[0])
+    assert inflated <= base + 1e-9
+
+
+@settings(max_examples=12, deadline=None)
+@given(rtt_mult=st.floats(1.0, 20.0), uplink_div=st.floats(1.0, 10.0),
+       chips=st.sampled_from([4, 8]))
+def test_link_inflation_never_raises_dc_score(rtt_mult, uplink_div, chips):
+    """Slower last-mile links (higher RTT, thinner uplink) can only
+    delay a DC offload's records and results: the DC plan's screened
+    score is monotone non-increasing in link latency. (The functional
+    drive is link-independent, so both engines replay one trace.)"""
+    base_e = _spec().compile()
+    slow_e = _spec(rtt_mult=rtt_mult, uplink_div=uplink_div).compile()
+    names = list(base_e.order)
+    plan = PlacementPlan.all_dc(names, chips=chips)
+    base = float(base_e.screening_model().score_batch([plan])[0])
+    slow = float(slow_e.screening_model().score_batch([plan])[0])
+    assert slow <= base + 1e-9
+
+
+def test_corrections_do_not_break_purity(engine):
+    """Calibration corrections are part of the screener state, not the
+    call: with corrections installed, scoring stays pure and clearing
+    them restores the raw scores exactly."""
+    from repro.scenario import ServiceCalibration, ServiceCorrection
+    plans = _plans(list(engine.order))
+    m = ScreeningModel(engine)
+    raw = m.score_batch(plans)
+    corr = {s: ServiceCalibration(
+        dc=ServiceCorrection(q_mult=1.5, lat_bias_s=1.0, drop_offset=0.3))
+        for s in engine.order}
+    m.set_corrections(corr)
+    c1 = m.score_batch(plans)
+    c2 = m.score_batch(plans)
+    assert (c1 == c2).all()
+    m.set_corrections(None)
+    assert (m.score_batch(plans) == raw).all()
