@@ -1,0 +1,219 @@
+"""Sim-to-real gap benchmark: the recorded placement scenarios replayed
+through BOTH executors of the same compiled ScenarioSpec — the DES
+engine (``spec.compile()``) and the live serving runtime
+(``repro.serve.serve_scenario``) — plus a live drift scenario where an
+``OnlineController`` re-places mid-run and a ``CalibrationLoop`` learns
+from *measured* residuals. Writes BENCH_serve.json.
+
+The two executors share every physical model (serial gateway devices,
+contended uplink, migration stalls, analytic DC roofline cells), so the
+residual gap isolates the serving divergences the DES abstracts away:
+late upstream data (the runtime never waits on dependencies), serial
+per-service operators, and measured — not clairvoyant — epoch rates.
+
+Acceptance (asserted in --smoke, the CI gate):
+
+  * replay gap    — |VoS_real − VoS_sim| / max(1, VoS_sim) under the
+                    recorded threshold on every replayed scenario
+  * determinism   — two live runs produce identical VoS + epoch records
+  * conservation  — the runtime's record ledger balances exactly
+  * calibration   — the live calibrating arm accumulates measured
+                    residual observations (the feedback path works on
+                    serving telemetry, unchanged)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+from repro.online import OnlineController
+from repro.placement import PlacementPlan
+from repro.scenario import RateSpec, ScenarioSpec, scenario
+from repro.serve import serve_scenario
+
+# Recorded ceiling on the relative engine-vs-runtime VoS gap. Measured
+# 0.0 on all three bundled scenarios (the executors are physically
+# equivalent when no fire misses its upstream's publish); the margin
+# covers platform float-ordering jitter, not semantic drift.
+GAP_THRESHOLD = 0.02
+
+
+def _out_path(smoke: bool) -> str:
+    default = "BENCH_serve_smoke.json" if smoke else "BENCH_serve.json"
+    return os.environ.get("BENCH_SERVE_OUT", default)
+
+
+def _bench_placement_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_placement.json")
+
+
+def _lat(r) -> Dict:
+    return {"p50": round(r.latency_p50, 4), "p95": round(r.latency_p95, 4),
+            "p99": round(r.latency_p99, 4)}
+
+
+def _replay(name: str, sc: Dict) -> Dict:
+    """One recorded scenario, the recorded searched plan, both
+    executors."""
+    spec = ScenarioSpec.from_dict(sc["spec"])
+    plan = PlacementPlan.from_dict(sc["search"]["assignments"])
+    t0 = time.perf_counter()
+    sim = spec.compile().run_plan(plan)
+    t1 = time.perf_counter()
+    real = serve_scenario(spec).run_plan(plan)
+    t2 = time.perf_counter()
+    gap = abs(real.vos - sim.vos) / max(1.0, abs(sim.vos))
+    return {
+        "plan": plan.label,
+        "vos_sim": round(sim.vos, 4), "vos_real": round(real.vos, 4),
+        "vos_gap_rel": round(gap, 6),
+        "latency_sim": _lat(sim), "latency_real": _lat(real),
+        "latency_p95_gap_s": round(abs(real.latency_p95 - sim.latency_p95),
+                                   6),
+        "fires": {"sim": sim.fires_total, "real": real.fires_total},
+        "ledger_conserved": bool(real.ledger.conserved()),
+        "gap_under_threshold": bool(gap <= GAP_THRESHOLD),
+        "wall_s": {"sim": round(t1 - t0, 3), "real": round(t2 - t1, 3)},
+    }
+
+
+def _live_spec(smoke: bool) -> ScenarioSpec:
+    """Drifting two-service pipeline with a mid-run outage: enough load
+    swing that the controller actually re-places while serving."""
+    horizon = 900.0 if smoke else 2400.0
+    return (scenario("serve_live")
+            .horizon(horizon).epochs(300.0)
+            .site("gw-a", user=True)
+            .site("gw-b")
+            .outage("gw-b", horizon / 3, horizon / 2)
+            .farm(queue="neubotspeed", n_things=6, seed=11, site="gw-a",
+                  rate=RateSpec.piecewise([(0.0, 1.0), (horizon / 2, 6.0),
+                                           (horizon, 1.0)]))
+            .farm(queue="aux", n_things=3, seed=13, site="gw-b",
+                  rate=RateSpec.constant(2.0))
+            .service("agg", queue="neubotspeed", column="download_speed",
+                     agg="max", width_s=120, slide_s=30)
+            .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+                 soft_energy_j=2.0, hard_energy_j=100.0)
+            .profile(flops_per_record=2e3)
+            .service("aux_mean", queue="aux", column="latency_ms",
+                     agg="mean", width_s=120, slide_s=60)
+            .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+                 soft_energy_j=2.0, hard_energy_j=100.0)
+            .profile(flops_per_record=2e3)
+            .service("fuse", queue="mix", column="value", agg="mean",
+                     width_s=240, slide_s=120)
+            .fed_by("agg", "aux_mean")
+            .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+                 soft_energy_j=2.0, hard_energy_j=100.0)
+            .profile(flops_per_record=2e3)
+            .build())
+
+
+def _live(smoke: bool) -> Dict:
+    """The live serving section: OnlineController re-placing mid-run,
+    CalibrationLoop fed by measured residuals, determinism probe."""
+    spec = _live_spec(smoke)
+
+    def _run():
+        ctl = OnlineController(calibrate=True)
+        res = serve_scenario(spec).run(ctl)
+        return res, ctl
+
+    t0 = time.perf_counter()
+    real, ctl = _run()
+    real2, _ = _run()                   # determinism probe
+    sim = spec.compile().run(OnlineController(calibrate=True))
+    wall = round(time.perf_counter() - t0, 3)
+
+    gap = abs(real.vos - sim.vos) / max(1.0, abs(sim.vos))
+    cal = ctl.calibration
+    deterministic = (real.vos == real2.vos and real.epochs == real2.epochs
+                     and real.ledger == real2.ledger)
+    return {
+        "spec": spec.to_dict(),
+        "vos_sim": round(sim.vos, 4), "vos_real": round(real.vos, 4),
+        "vos_gap_rel": round(gap, 6),
+        "latency_sim": _lat(sim), "latency_real": _lat(real),
+        "migrations": {"sim": sim.migrations, "real": real.migrations},
+        "epochs": real.epochs,
+        "calibration": {
+            "observations": cal.observations,
+            "history_len": len(cal.history),
+            "last_corrections": (cal.history[-1]["corrections"]
+                                 if cal.history else None),
+        },
+        "ledger_conserved": bool(real.ledger.conserved()),
+        "deterministic": bool(deterministic),
+        "gap_under_threshold": bool(gap <= GAP_THRESHOLD),
+        "wall_s": wall,
+    }
+
+
+def main(csv_rows, smoke: bool = False) -> None:
+    print("\n== Live serving runtime: sim-to-real gap (engine vs serve) ==")
+    report: Dict = {"smoke": smoke, "gap_threshold": GAP_THRESHOLD,
+                    "replays": {}, "live": None}
+
+    with open(_bench_placement_path()) as f:
+        recorded = json.load(f)["scenarios"]
+    names = list(recorded)[:1] if smoke else list(recorded)
+    for name in names:
+        rep = _replay(name, recorded[name])
+        report["replays"][name] = rep
+        print(f"replay {name:18s} sim={rep['vos_sim']:>9.2f} "
+              f"real={rep['vos_real']:>9.2f} gap={rep['vos_gap_rel']:.4f} "
+              f"p95Δ={rep['latency_p95_gap_s']:.4f}s "
+              f"[conserved={rep['ledger_conserved']} "
+              f"under-threshold={rep['gap_under_threshold']}]")
+        csv_rows.append((f"serve_replay_{name}_vos", rep["vos_real"] * 1e3,
+                         f"gap_rel={rep['vos_gap_rel']}"))
+
+    live = _live(smoke)
+    report["live"] = live
+    print(f"live   {'serve_live':18s} sim={live['vos_sim']:>9.2f} "
+          f"real={live['vos_real']:>9.2f} gap={live['vos_gap_rel']:.4f} "
+          f"migr={live['migrations']['real']} "
+          f"cal-obs={live['calibration']['observations']} "
+          f"[det={live['deterministic']} "
+          f"conserved={live['ledger_conserved']}]")
+    csv_rows.append(("serve_live_vos", live["vos_real"] * 1e3,
+                     f"gap_rel={live['vos_gap_rel']}"))
+
+    ok = (all(r["gap_under_threshold"] and r["ledger_conserved"]
+              for r in report["replays"].values())
+          and live["gap_under_threshold"] and live["ledger_conserved"]
+          and live["deterministic"]
+          and live["calibration"]["observations"] >= 2)
+    report["acceptance"] = {
+        "replay_gaps_under_threshold": all(
+            r["gap_under_threshold"] for r in report["replays"].values()),
+        "live_gap_under_threshold": live["gap_under_threshold"],
+        "ledgers_conserved": all(
+            r["ledger_conserved"] for r in report["replays"].values())
+        and live["ledger_conserved"],
+        "deterministic": live["deterministic"],
+        "calibration_fed_by_measurement":
+            live["calibration"]["observations"] >= 2,
+        "pass": bool(ok),
+    }
+    out = _out_path(smoke)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"sim-to-real gap under {GAP_THRESHOLD} on "
+          f"{len(report['replays'])} replays + live run "
+          f"-> {'PASS' if ok else 'FAIL'}; wrote {out}")
+    if smoke:
+        # CI serving smoke gate (scripts/ci.sh): the live runtime must
+        # track the engine within the recorded threshold, replay
+        # deterministically, conserve records, and feed the calibration
+        # loop from measured residuals
+        assert ok, "serve smoke: sim-to-real acceptance failed"
+
+
+if __name__ == "__main__":
+    import sys
+    main([], smoke="--smoke" in sys.argv)

@@ -6,6 +6,8 @@
   placement -> bench_placement        (edge↔DC plans, BENCH_placement.json)
   online  -> bench_online             (fleet controller, BENCH_online.json)
   search  -> bench_search_perf        (exact vs screened, BENCH_search.json)
+  serve   -> bench_serve              (engine vs live runtime sim-to-real
+                                       gap, BENCH_serve.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
   §Roofline -> bench_roofline         (dry-run derived terms per cell)
 
@@ -31,7 +33,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,pipeline,placement,online,"
-                         "search,kernels,roofline")
+                         "search,serve,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 scenario per stream bench at "
                          "reduced trace length")
@@ -43,7 +45,7 @@ def main() -> None:
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
     if (args.smoke or args.calibrate) and want is None:
-        want = {"placement", "online", "search"} if args.smoke \
+        want = {"placement", "online", "search", "serve"} if args.smoke \
             else {"placement"}
 
     csv_rows: list = []
@@ -60,8 +62,8 @@ def main() -> None:
 
     from benchmarks import (bench_kernels, bench_online, bench_pipeline,
                             bench_placement, bench_roofline,
-                            bench_search_perf, bench_value_heuristics,
-                            bench_power_capping)
+                            bench_search_perf, bench_serve,
+                            bench_value_heuristics, bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
     run("fig5", bench_power_capping.main, csv_rows,
         emulate=not args.no_emulation)
@@ -70,6 +72,7 @@ def main() -> None:
         calibrate=args.calibrate)
     run("online", bench_online.main, csv_rows, smoke=args.smoke)
     run("search", bench_search_perf.main, csv_rows, smoke=args.smoke)
+    run("serve", bench_serve.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)
 

@@ -36,6 +36,10 @@ SURFACE = {
         "EpochObservation", "OnlineController", "OracleController",
         "StaticController", "ForecastModel", "plan_on_average_rates",
         "diurnal", "piecewise_linear", "poisson_bursts", "step_bursts"),
+    "repro.serve": (
+        "ServeRuntime", "ServeConfig", "serve_scenario", "VirtualClock",
+        "ServeTelemetry", "StageFire", "ServiceStage", "FarmDriver",
+        "PlacementRouter", "DCPool", "UplinkShaper"),
 }
 
 

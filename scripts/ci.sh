@@ -22,6 +22,7 @@ if [[ "${CI_SKIP_API_SURFACE:-0}" != "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/api_surface.py
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/edge_offload_demo.py --smoke >/dev/null
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/edge_pipeline.py --smoke >/dev/null
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/serve_pipeline_demo.py --smoke >/dev/null
     echo "examples (--smoke): OK"
 fi
 
@@ -54,6 +55,10 @@ if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     # exact-only search (screen-vs-exact agreement gate), and
     # bench_online --smoke, which *asserts* the calibrated controller's
     # mean |calibration_gap| and oracle regret do not regress vs the
-    # uncalibrated arm on the smoke scenario (calibration smoke gate)
+    # uncalibrated arm on the smoke scenario (calibration smoke gate),
+    # and bench_serve --smoke, which *asserts* the live serving runtime
+    # tracks the DES engine within the recorded sim-to-real gap
+    # threshold, replays deterministically, conserves records, and
+    # feeds the calibration loop from measured residuals (serving gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

@@ -15,11 +15,15 @@ JITA4DS framing describes it:
                  migration hysteresis, per-epoch regret telemetry
   des_bridge.py  DEPRECATED shim — the incremental DES bridge is the
                  unified engine now (``repro.scenario.engine``);
-                 ``FleetCoSimulator`` aliases ``ScenarioEngine``
+                 ``FleetCoSimulator`` aliases ``ScenarioEngine`` and
+                 importing the shim warns (removal: v0.9, 2026-12-01)
 
 The bridge/controller names resolve lazily so the shim's import of
 ``repro.scenario`` cannot cycle back through this package's eager
-imports.
+imports. The observation-protocol types (``BridgeInfo``,
+``EpochObservation``, ``ServiceInfo``) resolve straight from their new
+home, :mod:`repro.scenario.observe`, so importing them here stays
+warning-free; only the legacy engine aliases route through the shim.
 """
 from repro.online.fleet import (ContendedUplink, EdgeSite, Fleet, FleetSpec,
                                 SiteSpec)
@@ -28,8 +32,8 @@ from repro.online.drift import (DriftScenario, DriftingFarm,
                                 piecewise_linear, poisson_bursts,
                                 step_bursts)
 
-_BRIDGE_NAMES = ("BridgeInfo", "EpochObservation", "FleetCoSimulator",
-                 "OnlineConfig", "OnlineResult", "ServiceInfo")
+_OBSERVE_NAMES = ("BridgeInfo", "EpochObservation", "ServiceInfo")
+_BRIDGE_NAMES = ("FleetCoSimulator", "OnlineConfig", "OnlineResult")
 _CONTROLLER_NAMES = ("ForecastModel", "ForecastResult", "OnlineController",
                      "OracleController", "StaticController",
                      "plan_on_average_rates")
@@ -37,10 +41,13 @@ _CONTROLLER_NAMES = ("ForecastModel", "ForecastResult", "OnlineController",
 __all__ = ["ContendedUplink", "EdgeSite", "Fleet", "FleetSpec", "SiteSpec",
            "DriftScenario", "DriftingFarm", "DriftingProducer", "constant",
            "diurnal", "piecewise_linear", "poisson_bursts", "step_bursts",
-           *_BRIDGE_NAMES, *_CONTROLLER_NAMES]
+           *_OBSERVE_NAMES, *_BRIDGE_NAMES, *_CONTROLLER_NAMES]
 
 
 def __getattr__(name):
+    if name in _OBSERVE_NAMES:
+        from repro.scenario import observe
+        return getattr(observe, name)
     if name in _BRIDGE_NAMES:
         from repro.online import des_bridge
         return getattr(des_bridge, name)

@@ -24,7 +24,7 @@ from repro.core.value import task_value
 from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
-from repro.scenario.engine import BridgeInfo, EpochObservation
+from repro.scenario.observe import BridgeInfo, EpochObservation
 from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
 from repro.scenario.screen import q_factor
 

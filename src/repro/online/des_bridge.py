@@ -12,12 +12,30 @@ importable:
   ``OnlineConfig``      → :class:`repro.scenario.engine.EngineConfig`
   ``OnlineResult``      → :class:`repro.scenario.engine.EngineResult`
 
+The observation-protocol types (``BridgeInfo``, ``EpochObservation``,
+``ServiceInfo``) are *not* deprecated — they moved to
+:mod:`repro.scenario.observe` and stay importable from ``repro.online``
+without touching this shim.
+
 New code should build engines from a declarative
-:class:`~repro.scenario.spec.ScenarioSpec` via ``spec.compile()``.
+:class:`~repro.scenario.spec.ScenarioSpec` via ``spec.compile()`` (or
+its live twin, :func:`repro.serve.serve_scenario`). Importing this
+module emits a :class:`DeprecationWarning`; it will be removed in v0.9
+(2026-12-01) — see README, Migration table.
 """
-from repro.scenario.engine import (BridgeInfo, EngineConfig,  # noqa: F401
-                                   EngineResult, EpochObservation,
-                                   ScenarioEngine, ServiceInfo)
+import warnings
+
+from repro.scenario.engine import (EngineConfig, EngineResult,  # noqa: F401
+                                   ScenarioEngine)
+from repro.scenario.observe import (BridgeInfo, EpochObservation,  # noqa: F401
+                                    ServiceInfo)
+
+warnings.warn(
+    "repro.online.des_bridge is deprecated and will be removed in v0.9 "
+    "(2026-12-01): FleetCoSimulator/OnlineConfig/OnlineResult are "
+    "repro.scenario's ScenarioEngine/EngineConfig/EngineResult; the "
+    "observation types live in repro.scenario.observe (see README, "
+    "Migration table)", DeprecationWarning, stacklevel=2)
 
 FleetCoSimulator = ScenarioEngine
 OnlineConfig = EngineConfig

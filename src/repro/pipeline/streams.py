@@ -21,10 +21,22 @@ class Record:
     values: Dict[str, float]
 
 
-class Queue:
-    """Bounded FIFO with per-consumer offsets (retained until all consume)."""
+DEFAULT_QUEUE_CAPACITY = 65536
 
-    def __init__(self, name: str, capacity: int = 65536):
+
+class Queue:
+    """Bounded FIFO with per-consumer offsets (retained until all consume).
+
+    Capacity is enforced with an oldest-drop policy: a publish into a
+    full queue evicts the head record and counts it in ``dropped`` (the
+    conservation ledger's ``overflow`` bucket). ``len(buf) <= capacity``
+    is an invariant at every point, including across ``set_capacity``
+    shrinks."""
+
+    def __init__(self, name: str, capacity: int = DEFAULT_QUEUE_CAPACITY):
+        if capacity < 1:
+            raise ValueError(f"queue {name!r}: capacity must be >= 1, "
+                             f"got {capacity}")
         self.name = name
         self.capacity = capacity
         self.buf: Deque[Record] = collections.deque()
@@ -39,8 +51,27 @@ class Queue:
             self.dropped += 1
         self.buf.append(rec)
 
+    def set_capacity(self, capacity: int) -> None:
+        """Rebound the queue; shrinking below the current backlog evicts
+        the oldest records with the same drop accounting as a full
+        publish."""
+        if capacity < 1:
+            raise ValueError(f"queue {self.name!r}: capacity must be >= 1, "
+                             f"got {capacity}")
+        self.capacity = capacity
+        while len(self.buf) > self.capacity:
+            self.buf.popleft()
+            self.base_seq += 1
+            self.dropped += 1
+
     def register(self, consumer: str) -> None:
         self.offsets.setdefault(consumer, self.base_seq + len(self.buf))
+
+    def backlog(self, consumer: str) -> int:
+        """Records published but not yet fetched by ``consumer`` (what a
+        backpressured publisher is waiting on)."""
+        off = max(self.offsets.get(consumer, self.base_seq), self.base_seq)
+        return self.base_seq + len(self.buf) - off
 
     def fetch(self, consumer: str, max_n: int = 1 << 30) -> List[Record]:
         off = self.offsets.get(consumer, self.base_seq)
@@ -55,9 +86,17 @@ class Broker:
     def __init__(self):
         self.queues: Dict[str, Queue] = {}
 
-    def queue(self, name: str, capacity: int = 65536) -> Queue:
+    def queue(self, name: str, capacity: Optional[int] = None) -> Queue:
+        """Get-or-create a queue. ``capacity=None`` (the default) leaves
+        an existing queue's bound untouched; an explicit capacity is
+        applied even when the queue already exists — previously it was
+        silently ignored, so two declarations with different bounds
+        diverged from what actually ran."""
         if name not in self.queues:
-            self.queues[name] = Queue(name, capacity)
+            self.queues[name] = Queue(name, capacity if capacity is not None
+                                      else DEFAULT_QUEUE_CAPACITY)
+        elif capacity is not None and capacity != self.queues[name].capacity:
+            self.queues[name].set_capacity(capacity)
         return self.queues[name]
 
 

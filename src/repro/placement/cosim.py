@@ -26,6 +26,7 @@ backward compatibility.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 from repro import hardware as hw
@@ -84,6 +85,11 @@ class CoSimulator:
     def __init__(self, build: Callable[[], Pipeline],
                  profiles: Dict[str, ServiceProfile],
                  cfg: Optional[CoSimConfig] = None):
+        warnings.warn(
+            "repro.placement.cosim.CoSimulator is deprecated and will be "
+            "removed in v0.9 (2026-12-01); use the Scenario API instead: "
+            "spec.compile().run_plan(plan) (see README, Migration table)",
+            DeprecationWarning, stacklevel=2)
         self.build = build
         self.profiles = dict(profiles)
         self.cfg = cfg or CoSimConfig()

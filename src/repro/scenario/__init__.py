@@ -17,6 +17,10 @@ The public surface of the co-simulation stack:
                 truth for operator cost
   calibrate.py  KernelCalibrator — measure flops_per_record from Pallas
                 kernel dry-runs instead of declaring it
+  observe.py    shared observation protocol — BridgeInfo /
+                EpochObservation / ObservationSource, so the DES engine
+                and the live serving runtime (``repro.serve``) are
+                interchangeable controller drivers
   feedback.py   CalibrationLoop — closed-loop forecast calibration:
                 RLS-fitted per-service correction terms from realized
                 engine residuals, injected into ForecastModel and
@@ -29,10 +33,12 @@ package.
 """
 from repro.scenario.profiles import ServiceProfile, ServiceSLO
 from repro.scenario.ledger import RecordLedger, ServiceLedger, FireRec
-from repro.scenario.engine import (BridgeInfo, CoSimResult, EngineConfig,
-                                   EngineResult, EpochObservation,
-                                   ScenarioEngine, ServiceInfo,
-                                   analytics_cost_model, single_site_fleet)
+from repro.scenario.observe import (BridgeInfo, EpochObservation,
+                                    ObservationSource, ServiceInfo,
+                                    epoch_bounds, epoch_of)
+from repro.scenario.engine import (CoSimResult, EngineConfig, EngineResult,
+                                   ScenarioEngine, analytics_cost_model,
+                                   single_site_fleet)
 from repro.scenario.spec import (FarmSpec, RateSpec, ScenarioBuilder,
                                  ScenarioSpec, ServiceSpec, StoreSpec,
                                  scenario)

@@ -58,6 +58,9 @@ from repro.placement.network import LinkSpec
 from repro.placement.plan import SITE_DC, SITE_EDGE, PlacementPlan
 from repro.scenario.ledger import (RecordLedger, ServiceLedger, _QueueTap,
                                    _ServiceTap, _topo_order, tap_and_drive)
+from repro.scenario.observe import (BridgeInfo, EpochObservation, ServiceInfo,
+                                    attach_forecast, epoch_bounds, epoch_of,
+                                    merge_realized_vos)
 from repro.scenario.profiles import ServiceProfile
 
 _EPS = 1e-9
@@ -135,63 +138,11 @@ def _fresh_heuristic(name: str):
 
 
 # ---------------------------------------------------------------------------
-# Per-service facts the controllers plan with
+# Per-service facts the controllers plan with: ServiceInfo, BridgeInfo and
+# EpochObservation now live in repro.scenario.observe (the shared protocol
+# between this engine and the live serving runtime) and are re-exported
+# above for backward compatibility.
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ServiceInfo:
-    """Static per-service facts a controller may plan with."""
-    queue: str
-    slide_s: float
-    width_s: float
-    buffer_budget: int
-
-
-@dataclasses.dataclass(frozen=True)
-class BridgeInfo:
-    """Snapshot handed to controllers at run start (``controller.bind``)."""
-    topology: Dict[str, List[str]]
-    profiles: Dict[str, ServiceProfile]
-    fleet: FleetSpec
-    services: Dict[str, ServiceInfo]
-    cost: CostModel
-    grid_chips: int
-    epoch_s: float
-    records_per_step: int
-    outages: Dict[str, Tuple[Tuple[float, float], ...]]
-
-
-@dataclasses.dataclass
-class EpochObservation:
-    """What a controller sees at an epoch boundary. ``*_oracle`` fields
-    are ground truth about the *coming* epoch — only the clairvoyant
-    baseline may read them; honest controllers plan from the observed
-    past (``rates_window``) and the instantaneous site health.
-
-    ``realized_window`` is the engine's realized per-service residual
-    per *completed* epoch (oldest first): VoS earned so far, completed /
-    dropped / still-inflight fire counts and the mean realized fire
-    latency — the measurement a forecast-calibration loop
-    (:mod:`repro.scenario.feedback`) trains on. Like ``rates_window``
-    it is strictly about the past, so honest controllers may read it.
-    Each epoch's snapshot is *frozen* at the first boundary after the
-    epoch completes: fires still in flight there stay counted
-    ``inflight`` (their value is simply never attributed — a conscious
-    under-measurement that keeps the feed one-pass and deterministic)."""
-    epoch: int
-    t0: float
-    t1: float
-    rates_window: List[Dict[str, float]]      # per completed epoch, oldest first
-    down_now: Dict[str, bool]
-    rates_oracle: Dict[str, float]
-    down_oracle: Dict[str, bool]
-    realized_window: List[Dict[str, Dict]] = dataclasses.field(
-        default_factory=list)
-
-    @property
-    def rates_prev(self) -> Optional[Dict[str, float]]:
-        return self.rates_window[-1] if self.rates_window else None
-
-
 @dataclasses.dataclass
 class _OFire:
     svc: str
@@ -403,14 +354,7 @@ class ScenarioEngine:
             for s in pipe.services}
         # epoch boundaries (last epoch absorbs any sub-epoch remainder)
         self.epoch_s = cfg.epoch_s or cfg.horizon_s
-        bounds, t = [], 0.0
-        while t < cfg.horizon_s - _EPS:
-            t1 = min(t + self.epoch_s, cfg.horizon_s)
-            if cfg.horizon_s - t1 < self.epoch_s * 0.5:
-                t1 = cfg.horizon_s
-            bounds.append((t, t1))
-            t = t1
-        self.epochs = bounds
+        self.epochs = epoch_bounds(cfg.horizon_s, cfg.epoch_s)
         self._fresh_pipe: Optional[Pipeline] = pipe
         self._driven = None
         self._true_rates: Optional[List[Dict[str, float]]] = None
@@ -431,10 +375,7 @@ class ScenarioEngine:
         return self._driven
 
     def _epoch_of(self, ts: float) -> int:
-        for k, (t0, t1) in enumerate(self.epochs):
-            if ts < t1 or k == len(self.epochs) - 1:
-                return k
-        return len(self.epochs) - 1
+        return epoch_of(self.epochs, ts)
 
     def true_epoch_rates(self) -> List[Dict[str, float]]:
         """Ground-truth newly-covered-records/s per service per epoch
@@ -892,9 +833,7 @@ class ScenarioEngine:
             # regret telemetry: controllers that score plans against a
             # forecast expose it per epoch; the realized per-epoch VoS
             # is merged in by _score once fires settle
-            tel = getattr(controller, "telemetry", None)
-            if tel and tel[-1].get("epoch") == k:
-                meta["forecast"] = dict(tel[-1])
+            attach_forecast(controller, k, meta)
             epoch_meta.append(meta)
 
         # ---- final sweep: drain cross-epoch stragglers -------------------
@@ -965,20 +904,7 @@ class ScenarioEngine:
                 "latency_p95": round(float(np.percentile(s_lat, 95)), 4)
                 if s_lat else float("nan"),
             }
-        for k, meta in enumerate(epoch_meta):
-            meta["vos"] = round(ep_vos[k], 4)
-            fc = meta.get("forecast")
-            if fc is not None and fc.get("chosen_vos") is not None:
-                # calibration gap: what the forecast promised for the
-                # played plan minus what the co-sim realized this epoch
-                fc["cosim_vos"] = round(ep_vos[k], 4)
-                fc["calibration_gap"] = round(fc["chosen_vos"] - ep_vos[k], 4)
-                if fc.get("chosen_vos_raw") is not None:
-                    # calibrated controllers also report the *raw*
-                    # (uncorrected) forecast of the played plan, so one
-                    # run carries its own calibrated-vs-raw comparison
-                    fc["calibration_gap_raw"] = round(
-                        fc["chosen_vos_raw"] - ep_vos[k], 4)
+        merge_realized_vos(epoch_meta, ep_vos)
 
         ledger, per_site = self._ledger(pipe, staps, qtaps)
         lat = (np.asarray(latencies) if latencies

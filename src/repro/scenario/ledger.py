@@ -196,14 +196,13 @@ def _topo_order(topology: Dict[str, List[str]],
     return order
 
 
-def tap_and_drive(pipe: Pipeline, horizon_s: float,
-                  step_s: Optional[float] = None
-                  ) -> Tuple[Dict[str, _ServiceTap], Dict[str, _QueueTap]]:
-    """Instrument every queue/service of ``pipe`` and drive the
-    functional dataflow to ``horizon_s`` in ``step_s`` increments
-    (default: the minimum service slide). Returns the service taps and
-    the per-service queue taps — the placement-independent fire trace
-    every engine run replays."""
+def tap_pipeline(pipe: Pipeline
+                 ) -> Tuple[Dict[str, _ServiceTap], Dict[str, _QueueTap]]:
+    """Instrument every queue/service of ``pipe`` without driving it.
+    Returns the service taps and the per-service queue taps. This is the
+    shared half of :func:`tap_and_drive`; the live serving runtime
+    (``repro.serve``) taps the pipeline the same way but lets its event
+    loop do the driving, so engine and runtime emit one ledger schema."""
     ctx = _PublisherContext()
     qtaps: Dict[int, _QueueTap] = {}
     for s in pipe.services:
@@ -212,6 +211,18 @@ def tap_and_drive(pipe: Pipeline, horizon_s: float,
     staps = {s.cfg.name: _ServiceTap(s, qtaps[id(s.q)], ctx)
              for s in pipe.services}
     by_service = {s.cfg.name: qtaps[id(s.q)] for s in pipe.services}
+    return staps, by_service
+
+
+def tap_and_drive(pipe: Pipeline, horizon_s: float,
+                  step_s: Optional[float] = None
+                  ) -> Tuple[Dict[str, _ServiceTap], Dict[str, _QueueTap]]:
+    """Instrument every queue/service of ``pipe`` and drive the
+    functional dataflow to ``horizon_s`` in ``step_s`` increments
+    (default: the minimum service slide). Returns the service taps and
+    the per-service queue taps — the placement-independent fire trace
+    every engine run replays."""
+    staps, by_service = tap_pipeline(pipe)
     step = step_s or min(s.cfg.window.slide_s for s in pipe.services)
     t = 0.0
     while t < horizon_s - _EPS:

@@ -1,0 +1,98 @@
+"""Deprecation shims: warn loudly, delegate bit-identically.
+
+``repro.placement.cosim.CoSimulator`` and ``repro.online.des_bridge``
+are scheduled for removal in v0.9 (2026-12-01; see README, Migration
+table). Until then they must (a) emit a ``DeprecationWarning`` at their
+legacy entry points, (b) delegate to the unified engine with
+bit-identical results, and (c) never tax the *non*-deprecated names —
+the observation-protocol types now live in ``repro.scenario.observe``
+and importing them through ``repro.online`` stays warning-free."""
+import importlib
+import sys
+import warnings
+
+import pytest
+
+from repro.scenario import RateSpec, scenario
+
+_SLO_KW = dict(soft_latency_s=2.0, hard_latency_s=10.0,
+               soft_energy_j=2.0, hard_energy_j=100.0)
+
+
+def _spec(horizon: float = 240.0):
+    return (scenario("shim")
+            .horizon(horizon)
+            .farm(n_things=3, seed=2, rate=RateSpec.constant(1.5))
+            .service("agg", queue="neubotspeed", column="download_speed",
+                     agg="max", width_s=120, slide_s=60)
+            .slo(**_SLO_KW).profile(flops_per_record=2e3)
+            .build())
+
+
+# ---------------------------------------------------- CoSimulator shim
+def test_cosimulator_init_emits_deprecation_warning():
+    from repro.placement import CoSimConfig, CoSimulator
+    spec = _spec()
+    with pytest.warns(DeprecationWarning, match="CoSimulator is deprecated"):
+        CoSimulator(spec.build_pipeline, spec.profiles(),
+                    CoSimConfig(horizon_s=240.0))
+
+
+def test_cosimulator_delegates_bit_identically():
+    """The shim's run() must be the unified engine's run_plan() — same
+    VoS, same ledger, same per-service detail, not approximately."""
+    from repro.placement import CoSimConfig, CoSimulator, PlacementPlan
+    spec = _spec()
+    plan = PlacementPlan.all_edge(spec.service_names())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shim = CoSimulator(spec.build_pipeline, spec.profiles(),
+                           CoSimConfig(horizon_s=240.0))
+    legacy = shim.run(plan)
+    unified = spec.compile().run_plan(plan)
+    assert legacy.vos == unified.vos
+    assert legacy.ledger == unified.ledger
+    assert legacy.per_service == unified.per_service
+
+
+def test_cosimulator_import_alone_does_not_warn():
+    """Importing the shim *module* (e.g. for its re-exported ledger
+    names) must stay silent; only instantiating the legacy class pays."""
+    sys.modules.pop("repro.placement.cosim", None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        import repro.placement.cosim  # noqa: F401
+
+
+# ----------------------------------------------------- des_bridge shim
+def test_des_bridge_import_emits_deprecation_warning():
+    sys.modules.pop("repro.online.des_bridge", None)
+    with pytest.warns(DeprecationWarning, match="des_bridge is deprecated"):
+        importlib.import_module("repro.online.des_bridge")
+
+
+def test_des_bridge_aliases_are_the_engine():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.online.des_bridge import (FleetCoSimulator, OnlineConfig,
+                                             OnlineResult)
+    from repro.scenario.engine import (EngineConfig, EngineResult,
+                                       ScenarioEngine)
+    assert FleetCoSimulator is ScenarioEngine
+    assert OnlineConfig is EngineConfig
+    assert OnlineResult is EngineResult
+
+
+def test_observation_names_via_online_stay_warning_free():
+    """BridgeInfo/EpochObservation/ServiceInfo moved to
+    repro.scenario.observe; resolving them through ``repro.online`` must
+    not route through (or import) the deprecated shim."""
+    sys.modules.pop("repro.online.des_bridge", None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        from repro.online import (BridgeInfo, EpochObservation,  # noqa: F401
+                                  ServiceInfo)
+    assert "repro.online.des_bridge" not in sys.modules
+    from repro.scenario import observe
+    from repro.online import BridgeInfo as B2
+    assert B2 is observe.BridgeInfo
