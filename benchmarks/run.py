@@ -6,6 +6,8 @@
   placement -> bench_placement        (edge↔DC plans, BENCH_placement.json)
   online  -> bench_online             (fleet controller, BENCH_online.json)
   search  -> bench_search_perf        (exact vs screened, BENCH_search.json)
+  robust  -> bench_robust             (fluid ensemble vs DES, CVaR-vs-mean
+                                       plan choice, BENCH_robust.json)
   serve   -> bench_serve              (engine vs live runtime sim-to-real
                                        gap, BENCH_serve.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
@@ -33,7 +35,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,pipeline,placement,online,"
-                         "search,serve,kernels,roofline")
+                         "search,robust,serve,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 scenario per stream bench at "
                          "reduced trace length")
@@ -45,8 +47,8 @@ def main() -> None:
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
     if (args.smoke or args.calibrate) and want is None:
-        want = {"placement", "online", "search", "serve"} if args.smoke \
-            else {"placement"}
+        want = {"placement", "online", "search", "robust", "serve"} \
+            if args.smoke else {"placement"}
 
     csv_rows: list = []
     failures = []
@@ -61,7 +63,7 @@ def main() -> None:
             traceback.print_exc()
 
     from benchmarks import (bench_kernels, bench_online, bench_pipeline,
-                            bench_placement, bench_roofline,
+                            bench_placement, bench_robust, bench_roofline,
                             bench_search_perf, bench_serve,
                             bench_value_heuristics, bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
@@ -72,6 +74,7 @@ def main() -> None:
         calibrate=args.calibrate)
     run("online", bench_online.main, csv_rows, smoke=args.smoke)
     run("search", bench_search_perf.main, csv_rows, smoke=args.smoke)
+    run("robust", bench_robust.main, csv_rows, smoke=args.smoke)
     run("serve", bench_serve.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)

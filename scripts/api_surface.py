@@ -28,8 +28,12 @@ SURFACE = {
         "EdgeNode", "EdgeSpec", "LinkSpec", "NetworkModel", "PlacementPlan",
         "ServicePlacement", "CoSimConfig", "CoSimResult", "CoSimulator",
         "ServiceProfile", "ServiceSLO", "Evaluator", "search_placement",
-        "exhaustive_search", "greedy_search", "screened_search",
-        "enumerate_plans"),
+        "exhaustive_search", "greedy_search", "robust_search",
+        "screened_search", "enumerate_plans"),
+    "repro.fluid": (
+        "FluidEngine", "FluidResult", "ScenarioEnsemble", "sample_specs",
+        "RiskSpec", "risk_score", "rank_plans", "ensemble_spread",
+        "calibration_prior"),
     "repro.online": (
         "Fleet", "FleetSpec", "SiteSpec", "ContendedUplink", "DriftingFarm",
         "FleetCoSimulator", "OnlineConfig", "OnlineResult", "BridgeInfo",

@@ -59,6 +59,11 @@ if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     # and bench_serve --smoke, which *asserts* the live serving runtime
     # tracks the DES engine within the recorded sim-to-real gap
     # threshold, replays deterministically, conserves records, and
-    # feeds the calibration loop from measured residuals (serving gate)
+    # feeds the calibration loop from measured residuals (serving gate),
+    # and bench_robust --smoke, which *asserts* the fluid ensemble
+    # engine agrees with the exact DES within 5%, sustains >= 50x the
+    # sequential-DES scenario-evals/sec, and that the CVaR objective
+    # strictly improves worst-quantile VoS with DES tail confirmation
+    # (robust-planning gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

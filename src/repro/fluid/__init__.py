@@ -1,0 +1,24 @@
+"""Batched fluid-approximation scenario engine (pure JAX).
+
+The exact DES scores one (plan, drift-trace) pair per Python event
+loop; this package lowers a compiled scenario to padded dense arrays
+and evaluates *ensembles* — N drift realizations × M plan candidates —
+in one jitted ``lax.scan``, returning per-(realization, plan)
+VoS / latency / drop trajectories. On top of it sit distributionally
+robust risk metrics (mean / CVaR / worst-quantile VoS) used by
+``repro.placement.search.robust_search`` and
+``OnlineController(risk=...)``.
+
+The DES remains ground truth: the fluid tier ranks, the DES re-scores
+survivors (the same two-tier contract the numpy screen established).
+"""
+from repro.fluid.engine import FluidEngine, FluidResult
+from repro.fluid.ensemble import ScenarioEnsemble, sample_specs
+from repro.fluid.robust import (RiskSpec, calibration_prior, ensemble_spread,
+                                rank_plans, risk_score)
+
+__all__ = [
+    "FluidEngine", "FluidResult", "ScenarioEnsemble", "sample_specs",
+    "RiskSpec", "risk_score", "rank_plans", "ensemble_spread",
+    "calibration_prior",
+]

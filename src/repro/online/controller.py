@@ -18,6 +18,8 @@ chosen schedule.
 from __future__ import annotations
 
 import dataclasses
+import math
+import random
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.value import task_value
@@ -26,7 +28,7 @@ from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
 from repro.scenario.observe import BridgeInfo, EpochObservation
 from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
-from repro.scenario.screen import q_factor
+from repro.scenario.queueing import q_factor
 
 
 @dataclasses.dataclass
@@ -311,7 +313,20 @@ class OnlineController:
     corrected model. Telemetry then additionally records the raw
     (uncorrected) forecast of the played plan (``chosen_vos_raw`` — the
     engine derives ``calibration_gap_raw`` from it) and the corrections
-    in force."""
+    in force.
+
+    ``risk`` switches plan *selection* from the single sliding-estimate
+    forecast to a distributionally robust pick: each epoch the rate
+    estimate is perturbed into a small lognormal ensemble of forecast
+    models (deterministic per ``(seed, epoch)``), a candidate shortlist
+    (the nominal search winner, the incumbent, and the anchor plans) is
+    scored under every realization, and the plan with the best risk
+    score (:class:`repro.fluid.robust.RiskSpec` — e.g. ``"cvar"``) is
+    handed to the usual hysteresis gate. ``risk=None`` (default) is
+    bit-identical to the single-trace controller. When calibration is
+    also on, the ensemble's per-service VoS spread for the chosen plan
+    is fed to ``CalibrationLoop.set_variance_prior`` so volatile
+    services keep larger RLS gains."""
     charge_migrations = True
     label = "online"
 
@@ -321,7 +336,9 @@ class OnlineController:
                  seed: int = 0,
                  prior_rates: Optional[Mapping[str, float]] = None,
                  calibrate: bool = False,
-                 calibration: Optional[CalibrationLoop] = None):
+                 calibration: Optional[CalibrationLoop] = None,
+                 risk=None, risk_ensemble: int = 16,
+                 risk_rate_scale: float = 0.25):
         self.chips_options = tuple(chips_options)
         self.dvfs_options = tuple(dvfs_options)
         self.window = window
@@ -330,8 +347,13 @@ class OnlineController:
         self.prior_rates = dict(prior_rates) if prior_rates else None
         self.calibrate = calibrate or calibration is not None
         self.calibration = calibration
+        self.risk = risk
+        self.risk_ensemble = int(risk_ensemble)
+        self.risk_rate_scale = float(risk_rate_scale)
         if self.calibrate:
             self.label = "online-cal"
+        if self.risk is not None:
+            self.label = self.label + "-risk"
         self.current: Optional[PlacementPlan] = None
         self.telemetry: List[Dict] = []
 
@@ -378,6 +400,83 @@ class OnlineController:
         self._observed_upto = max(self._observed_upto,
                                   len(obs.realized_window))
 
+    # -------------------------------------------------------------- robust
+    def _risk_candidates(self, sr, edge_sites) -> List[PlacementPlan]:
+        """Shortlist the ensemble re-scores: the nominal search winner
+        first (stable-tie favorite), then the incumbent and the anchor
+        plans."""
+        names = list(self.info.topology)
+        cands = [sr.plan]
+        if self.current is not None:
+            cands.append(self.current)
+        for site in edge_sites:
+            cands.append(PlacementPlan.all_edge(names, site=site))
+        for c in self.chips_options:
+            cands.append(PlacementPlan.all_dc(names, chips=c,
+                                              dvfs_f=self.dvfs_options[0]))
+        out: List[PlacementPlan] = []
+        seen = set()
+        for p in cands:
+            k = p.key()
+            if k not in seen:
+                seen.add(k)
+                out.append(p)
+        return out
+
+    def _robust_pick(self, rates, down, corr, sr, edge_sites,
+                     epoch: int) -> Tuple[PlacementPlan, Dict]:
+        """Risk-ranked plan selection over a lognormal rate-forecast
+        ensemble (realization 0 is the nominal estimate); deterministic
+        per ``(seed, epoch)``."""
+        from repro.fluid.robust import RiskSpec, risk_score
+
+        risk = RiskSpec.of(self.risk)
+        rng = random.Random((self.seed + 1) * 1_000_003 + epoch * 7919)
+        models = [ForecastModel(self.info, rates, down, corrections=corr)]
+        for _ in range(self.risk_ensemble):
+            pr = {s: r * math.exp(rng.gauss(0.0, self.risk_rate_scale))
+                  for s, r in sorted(rates.items())}
+            models.append(ForecastModel(self.info, pr, down,
+                                        corrections=corr))
+        cands = self._risk_candidates(sr, edge_sites)
+        vos = [[m.run(p).vos for p in cands] for m in models]
+        scores = risk_score(vos, risk)
+        best_i = int(scores.argmax())   # first max: sr.plan wins ties
+        best = cands[best_i]
+
+        if self.calibration is not None:
+            # ensemble spread of the chosen plan's per-service forecast
+            # VoS -> RLS variance prior (volatile services keep learning)
+            per: Dict[str, List[float]] = {}
+            for m in models:
+                _, det = m.predict(best)
+                for s, d in det.items():
+                    per.setdefault(s, []).append(d["vos"])
+            prior: Dict[str, Dict[str, float]] = {}
+            for s, vals in per.items():
+                scale = max(1e-9, max(abs(v) for v in vals))
+                mean = sum(vals) / len(vals)
+                rel = (sum((v - mean) ** 2 for v in vals)
+                       / len(vals)) ** 0.5 / scale
+                is_edge = best.placement(s).is_edge
+                prior[s] = {"edge": rel if is_edge else 0.0,
+                            "dc": 0.0 if is_edge else rel}
+            self.calibration.set_variance_prior(prior)
+
+        info = {
+            "metric": risk.label,
+            "ensemble": len(models),
+            "candidates": len(cands),
+            "chosen": best.label,
+            "nominal_best": sr.plan.label,
+            "diverged": best.key() != sr.plan.key(),
+            "scores": {p.label: (round(float(scores[i]), 4)
+                                 if math.isfinite(float(scores[i]))
+                                 else None)
+                       for i, p in enumerate(cands)},
+        }
+        return best, info
+
     # -------------------------------------------------------------- decide
     def decide(self, obs: EpochObservation) -> PlacementPlan:
         rates, down = self._rates(obs), self._down(obs)
@@ -392,6 +491,10 @@ class OnlineController:
         sr = search_placement(model, self.chips_options, self.dvfs_options,
                               seed=self.seed, edge_sites=edge_sites)
         best = sr.plan
+        risk_entry = None
+        if self.risk is not None:
+            best, risk_entry = self._robust_pick(rates, down, corr, sr,
+                                                 edge_sites, obs.epoch)
         new, new_detail = model.predict(best)
         switched = True
         if self.current is None:
@@ -420,6 +523,8 @@ class OnlineController:
                        "cache_hits": sr.cache_hits,
                        "cache_misses": sr.cache_misses},
         }
+        if risk_entry is not None:
+            entry["risk"] = risk_entry
         if self.calibration is not None:
             if chosen.feasible:
                 # raw forecast detail of the played plan (reused from

@@ -26,8 +26,18 @@ RateCurve = Callable[[float], float]
 _MIN_RATE_HZ = 1e-6
 
 
+def _tag(curve: RateCurve, kind: str, **params) -> RateCurve:
+    """Attach the declarative recipe to a curve closure so ensemble
+    sampling (:meth:`DriftScenario.sample`) can perturb it structurally
+    (re-seed a poisson process, shift a diurnal phase) instead of just
+    scaling the opaque callable."""
+    curve.drift_kind = kind          # type: ignore[attr-defined]
+    curve.drift_params = params      # type: ignore[attr-defined]
+    return curve
+
+
 def constant(rate_hz: float) -> RateCurve:
-    return lambda t: rate_hz
+    return _tag(lambda t: rate_hz, "constant", rate_hz=rate_hz)
 
 
 def diurnal(base_hz: float, amplitude: float = 0.5,
@@ -40,7 +50,8 @@ def diurnal(base_hz: float, amplitude: float = 0.5,
     def curve(t: float) -> float:
         return base_hz * (1.0 + amplitude
                           * math.sin(2 * math.pi * (t - phase_s) / period_s))
-    return curve
+    return _tag(curve, "diurnal", base_hz=base_hz, amplitude=amplitude,
+                period_s=period_s, phase_s=phase_s)
 
 
 def step_bursts(base_hz: float, burst_hz: float,
@@ -53,7 +64,8 @@ def step_bursts(base_hz: float, burst_hz: float,
             if t0 <= t < t1:
                 return burst_hz
         return base_hz
-    return curve
+    return _tag(curve, "step_bursts", base_hz=base_hz, burst_hz=burst_hz,
+                windows=tuple(wins))
 
 
 def piecewise_linear(points: Sequence[Tuple[float, float]]) -> RateCurve:
@@ -71,7 +83,7 @@ def piecewise_linear(points: Sequence[Tuple[float, float]]) -> RateCurve:
                 frac = (t - t0) / max(t1 - t0, 1e-12)
                 return r0 + frac * (r1 - r0)
         return pts[-1][1]
-    return curve
+    return _tag(curve, "piecewise_linear", points=tuple(pts))
 
 
 def poisson_bursts(base_hz: float, burst_hz: float, horizon_s: float,
@@ -86,7 +98,65 @@ def poisson_bursts(base_hz: float, burst_hz: float, horizon_s: float,
         length = rng.expovariate(1.0 / mean_len_s)
         wins.append((t, min(t + length, horizon_s)))
         t += length + rng.expovariate(1.0 / mean_gap_s)
-    return step_bursts(base_hz, burst_hz, wins)
+    return _tag(step_bursts(base_hz, burst_hz, wins), "poisson_bursts",
+                base_hz=base_hz, burst_hz=burst_hz, horizon_s=horizon_s,
+                mean_gap_s=mean_gap_s, mean_len_s=mean_len_s, seed=seed)
+
+
+def _lognorm(rng: random.Random, sigma: float) -> float:
+    return math.exp(rng.gauss(0.0, sigma))
+
+
+def perturb_curve(curve: RateCurve, rng: random.Random,
+                  rate_scale: float = 0.15) -> RateCurve:
+    """One perturbed realization of a rate curve: structural jitter for
+    tagged curves (the factories above), a plain lognormal amplitude
+    scale for opaque callables. Deterministic in ``rng``'s state."""
+    kind = getattr(curve, "drift_kind", None)
+    p = dict(getattr(curve, "drift_params", {}) or {})
+    if kind == "constant":
+        return constant(p["rate_hz"] * _lognorm(rng, rate_scale))
+    if kind == "diurnal":
+        return diurnal(
+            p["base_hz"] * _lognorm(rng, rate_scale),
+            amplitude=min(0.95, p["amplitude"] * _lognorm(rng, rate_scale)),
+            period_s=p["period_s"],
+            phase_s=p["phase_s"] + rng.gauss(0.0, p["period_s"] / 12.0))
+    if kind == "step_bursts":
+        wins = []
+        for t0, t1 in p["windows"]:
+            length = max(1e-9, (t1 - t0) * _lognorm(rng, rate_scale))
+            start = max(0.0, t0 + rng.gauss(0.0, 0.1 * (t1 - t0)))
+            wins.append((start, start + length))
+        return step_bursts(p["base_hz"] * _lognorm(rng, rate_scale),
+                           p["burst_hz"] * _lognorm(rng, rate_scale), wins)
+    if kind == "piecewise_linear":
+        return piecewise_linear(
+            [(t, r * _lognorm(rng, rate_scale)) for t, r in p["points"]])
+    if kind == "poisson_bursts":
+        return poisson_bursts(
+            p["base_hz"] * _lognorm(rng, rate_scale),
+            p["burst_hz"] * _lognorm(rng, rate_scale),
+            p["horizon_s"], p["mean_gap_s"], p["mean_len_s"],
+            seed=rng.randrange(2 ** 31))   # resampled arrival process
+    factor = _lognorm(rng, rate_scale)
+    return _tag(lambda t: factor * curve(t), "scaled", factor=factor)
+
+
+def perturb_outages(outages, rng: random.Random,
+                    onset_scale: float = 0.1):
+    """Jitter each outage window's onset (duration preserved, onsets
+    clamped at 0) — the outage-noise half of ensemble sampling."""
+    out = {}
+    for site, wins in outages.items():
+        jittered = []
+        for d, u in wins:
+            length = u - d
+            start = max(0.0, d + rng.gauss(0.0, onset_scale * max(length,
+                                                                  1e-9)))
+            jittered.append((start, start + length))
+        out[site] = tuple(sorted(jittered))
+    return out
 
 
 class DriftingProducer(StreamProducer):
@@ -134,3 +204,25 @@ class DriftScenario:
 
     def curve(self, queue: str, default_hz: float = 1.0) -> RateCurve:
         return self.curves.get(queue, constant(default_hz))
+
+    def sample(self, rng, n: int,
+               rate_scale: float = 0.15,
+               onset_scale: float = 0.1) -> Tuple["DriftScenario", ...]:
+        """``n`` perturbed realizations of this drift shape — the
+        ensemble source for the fluid engine. ``rng`` is a seed int or a
+        ``random.Random``; the same seed yields bit-identical
+        realizations (curves and outages alike). Jitter is structural
+        where the curve recipe is known: diurnal phase/amplitude,
+        burst-window onsets/lengths, re-seeded poisson arrival
+        processes, per-knot piecewise rates."""
+        if not isinstance(rng, random.Random):
+            rng = random.Random(rng)
+        reals = []
+        for k in range(n):
+            curves = {q: perturb_curve(c, rng, rate_scale)
+                      for q, c in sorted(self.curves.items())}
+            outages = perturb_outages(self.outages, rng, onset_scale)
+            reals.append(dataclasses.replace(
+                self, name=f"{self.name}#{k}", curves=curves,
+                outages=outages))
+        return tuple(reals)

@@ -26,7 +26,8 @@ _COSIM_NAMES = ("CoSimConfig", "CoSimResult", "CoSimulator",
                 "RecordLedger", "ServiceLedger", "ServiceProfile",
                 "ServiceSLO", "analytics_cost_model")
 _SEARCH_NAMES = ("Evaluator", "SearchResult", "exhaustive_search",
-                 "greedy_search", "screened_search", "search_placement")
+                 "greedy_search", "robust_search", "screened_search",
+                 "search_placement")
 
 __all__ = ["EdgeNode", "EdgeSpec", "FireExec", "LinkSpec", "NetworkModel",
            "PlacementPlan", "ServicePlacement", "SITE_DC", "SITE_EDGE",

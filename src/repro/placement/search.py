@@ -289,21 +289,21 @@ def screened_search(cosim: CoSimulator,
             screener.set_corrections(prev_corr)
 
 
-def _screened_search(cosim, ev: Evaluator, screener,
-                     chips_options: Sequence[int],
-                     dvfs_options: Sequence[float], seed: int,
-                     top_k: Optional[int], edge_sites: Sequence[str],
-                     enumerate_limit: int, sample_budget: int,
-                     climbers: int, climb_rounds: int,
-                     calibrated: bool = False) -> SearchResult:
-    hits0, misses0 = ev.hits, ev.misses
+def _screen_shortlist(ev: Evaluator, screener,
+                      options: Sequence[ServicePlacement],
+                      anchors: Sequence[PlacementPlan], seed: int,
+                      top_k: int, enumerate_limit: int, sample_budget: int,
+                      climbers: int, climb_rounds: int):
+    """Tier-1 candidate generation shared by ``screened_search`` and
+    ``robust_search``: score the whole space (small) or anchors + a
+    seeded sample refined by batched single-flip hill climbing (large),
+    then return the deduped top-K survivors best-first, the method
+    label, and screening stats. Deterministic for a fixed seed."""
     names = list(screener.order)
-    options = service_options(chips_options, dvfs_options, edge_sites)
     S, n_opts = len(names), len(options)
     space = n_opts ** S
 
     t0 = time.perf_counter()
-    anchors = _anchor_plans(names, chips_options, dvfs_options, edge_sites)
     if space <= enumerate_limit:
         grids = np.meshgrid(*([np.arange(n_opts)] * S), indexing="ij")
         P = np.stack(grids, axis=-1).reshape(-1, S)
@@ -348,9 +348,6 @@ def _screened_search(cosim, ev: Evaluator, screener,
     screen_wall = time.perf_counter() - t0
 
     # deterministic top-K: stable sort on score, dedup on canonical key
-    if top_k is None:
-        top_k = (max(2, min(16, space // 10))
-                 if method == "screened-exhaustive" else 16)
     order = np.argsort(-scores, kind="stable")
     survivors: List[PlacementPlan] = []
     seen = set()
@@ -363,6 +360,33 @@ def _screened_search(cosim, ev: Evaluator, screener,
         survivors.append(plan)
         if len(survivors) >= top_k:
             break
+    stats = {"screened": int(len(P)), "space": int(space),
+             "screen_wall_s": round(screen_wall, 4)}
+    return survivors, method, stats
+
+
+def _default_top_k(space: int, enumerate_limit: int) -> int:
+    return (max(2, min(16, space // 10)) if space <= enumerate_limit
+            else 16)
+
+
+def _screened_search(cosim, ev: Evaluator, screener,
+                     chips_options: Sequence[int],
+                     dvfs_options: Sequence[float], seed: int,
+                     top_k: Optional[int], edge_sites: Sequence[str],
+                     enumerate_limit: int, sample_budget: int,
+                     climbers: int, climb_rounds: int,
+                     calibrated: bool = False) -> SearchResult:
+    hits0, misses0 = ev.hits, ev.misses
+    names = list(screener.order)
+    options = service_options(chips_options, dvfs_options, edge_sites)
+    space = len(options) ** len(names)
+    anchors = _anchor_plans(names, chips_options, dvfs_options, edge_sites)
+    if top_k is None:
+        top_k = _default_top_k(space, enumerate_limit)
+    survivors, method, shortlist_stats = _screen_shortlist(
+        ev, screener, options, anchors, seed, top_k, enumerate_limit,
+        sample_budget, climbers, climb_rounds)
     screen_best_key = survivors[0].key() if survivors else None
 
     # tier 2: exact DES on survivors + anchors (memoized)
@@ -373,15 +397,134 @@ def _screened_search(cosim, ev: Evaluator, screener,
         if best is None or _score(res) > _score(best):
             best_plan, best = plan, res
     assert best_plan is not None and best is not None
-    screen_stats = {
-        "screened": int(len(P)), "space": int(space), "top_k": int(top_k),
+    screen_stats = dict(shortlist_stats)
+    screen_stats.update({
+        "top_k": int(top_k),
         "survivors": len(survivors), "anchors": len(anchors),
-        "screen_wall_s": round(screen_wall, 4),
         "agreement": bool(screen_best_key == best_plan.key()),
         "calibrated": bool(calibrated),
-    }
+    })
     return SearchResult(best_plan, best, method, ev.misses - misses0,
                         ev.history, screen=screen_stats,
+                        cache_hits=ev.hits - hits0,
+                        cache_misses=ev.misses - misses0)
+
+
+def robust_search(cosim: CoSimulator, ensemble, risk="cvar",
+                  chips_options: Sequence[int] = (4, 8, 16),
+                  dvfs_options: Sequence[float] = (1.0,),
+                  seed: int = 0,
+                  shortlist: int = 24,
+                  final_k: int = 6,
+                  evaluator: Optional[Evaluator] = None,
+                  edge_sites: Sequence[str] = (SITE_EDGE,),
+                  enumerate_limit: int = 65536,
+                  sample_budget: int = 2048,
+                  climbers: int = 8,
+                  climb_rounds: int = 32,
+                  corrections=None,
+                  prev_plan: Optional[PlacementPlan] = None) -> SearchResult:
+    """Three-tier distributionally robust search.
+
+    Tier 1 is the shared vectorized screen (``_screen_shortlist``) over
+    the single nominal trace, kept only to cut the space down to
+    ``shortlist`` candidates. Tier 2 evaluates every candidate against
+    *all* drift realizations of ``ensemble`` (a
+    :class:`repro.fluid.ensemble.ScenarioEnsemble`) in one jitted fluid
+    call and ranks plans by ``risk`` (a
+    :class:`repro.fluid.robust.RiskSpec`, a metric name, or ``None`` for
+    risk-neutral mean). Tier 3 re-scores the top ``final_k`` finalists
+    plus the anchor plans with the exact DES; the winner is the
+    best-risk finalist the DES confirms feasible (falling back to the
+    best exact score if none is).
+
+    ``prev_plan`` charges per-candidate migration stalls inside the
+    fluid tier, so risk ranking sees switching costs. Deterministic for
+    a fixed seed."""
+    from repro.fluid.robust import RiskSpec, risk_score
+
+    risk = RiskSpec.of(risk if risk is not None else "mean")
+    ev = evaluator or Evaluator(cosim)
+    screener = ev.screener
+    if screener is None:
+        raise ValueError(f"{type(cosim).__name__} exposes no "
+                         "screening_model; robust_search needs tier 1")
+    hits0, misses0 = ev.hits, ev.misses
+    names = list(screener.order)
+    options = service_options(chips_options, dvfs_options, edge_sites)
+    anchors = _anchor_plans(names, chips_options, dvfs_options, edge_sites)
+
+    prev_corr = (screener.set_corrections(corrections)
+                 if corrections is not None else None)
+    try:
+        survivors, method, shortlist_stats = _screen_shortlist(
+            ev, screener, options, anchors, seed, shortlist,
+            enumerate_limit, sample_budget, climbers, climb_rounds)
+    finally:
+        if corrections is not None:
+            screener.set_corrections(prev_corr)
+
+    # candidate set for the fluid tier: screened survivors first, then
+    # any anchor the screen did not already surface
+    candidates: List[PlacementPlan] = []
+    seen = set()
+    for plan in list(survivors) + list(anchors):
+        key = plan.key()
+        if key not in seen:
+            seen.add(key)
+            candidates.append(plan)
+
+    # tier 2: N realizations x M candidates in one jitted fluid call
+    t0 = time.perf_counter()
+    stalls = (ensemble.fluid.migration_stalls(prev_plan, candidates)
+              if prev_plan is not None else None)
+    fr = ensemble.evaluate(candidates, corrections=corrections,
+                           stalls=stalls)
+    fluid_wall = time.perf_counter() - t0
+    scores = risk_score(fr.vos, risk)
+    mean_scores = fr.vos.mean(axis=0)
+    risk_order = np.argsort(-scores, kind="stable")
+    finalists = [candidates[i] for i in risk_order[:max(1, final_k)]]
+    fluid_best_key = finalists[0].key()
+
+    # tier 3: exact DES on finalists + anchors; winner = best-risk
+    # finalist the DES confirms feasible
+    exact: Dict[Tuple, CoSimResult] = {}
+    for plan in finalists + list(anchors):
+        exact[plan.key()] = ev(plan)
+    best_plan: Optional[PlacementPlan] = None
+    for plan in finalists:
+        if exact[plan.key()].feasible:
+            best_plan = plan
+            break
+    if best_plan is None:    # every finalist infeasible under the DES
+        pool = finalists + list(anchors)
+        best_plan = max(pool, key=lambda p: _score(exact[p.key()]))
+    best = exact[best_plan.key()]
+
+    idx_of = {p.key(): i for i, p in enumerate(candidates)}
+    screen_stats = dict(shortlist_stats)
+    screen_stats.update({
+        "top_k": int(shortlist), "survivors": len(survivors),
+        "anchors": len(anchors), "calibrated": corrections is not None,
+        "agreement": bool(fluid_best_key == best_plan.key()),
+        "robust": {
+            "risk": risk.label,
+            "ensemble": int(ensemble.n_realizations),
+            "candidates": len(candidates),
+            "fluid_wall_s": round(fluid_wall, 4),
+            "finalists": [
+                {"plan": p.label,
+                 "risk_score": float(scores[idx_of[p.key()]]),
+                 "mean_score": float(mean_scores[idx_of[p.key()]]),
+                 "des_vos": float(exact[p.key()].vos),
+                 "des_feasible": bool(exact[p.key()].feasible)}
+                for p in finalists],
+        },
+    })
+    return SearchResult(best_plan, best, f"robust[{risk.label}]+{method}",
+                        ev.misses - misses0, ev.history,
+                        screen=screen_stats,
                         cache_hits=ev.hits - hits0,
                         cache_misses=ev.misses - misses0)
 

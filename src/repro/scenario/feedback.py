@@ -264,6 +264,38 @@ class CalibrationLoop:
                             for s, c in self.corrections().items()},
         })
 
+    def set_variance_prior(self, prior: Mapping[str, Mapping[str, float]],
+                           scale: float = 0.5,
+                           max_inflation: float = 4.0
+                           ) -> Dict[Tuple[str, str], float]:
+        """Inflate the RLS covariance of volatile (service, tier) pairs.
+
+        ``prior[svc][tier]`` is a relative predictive-uncertainty signal
+        in [0, 1] — e.g. the fluid-ensemble VoS spread from
+        :func:`repro.fluid.robust.calibration_prior`. Each named pair's
+        latency *and* drop covariance is multiplied by
+        ``min(1 + scale·rel, max_inflation)``, so services whose
+        forecast varies a lot across drift realizations keep larger RLS
+        gains and re-calibrate faster, while ``rel == 0`` pairs are left
+        bit-identical. Calling this every epoch is the intended use: it
+        counteracts covariance shrinkage exactly for the pairs the
+        ensemble says are still uncertain. Plain float math —
+        deterministic. Returns the applied inflation factors."""
+        applied: Dict[Tuple[str, str], float] = {}
+        for svc, tiers in sorted(prior.items()):
+            for tier, rel in sorted(tiers.items()):
+                key = (svc, tier)
+                if key not in self._lat:
+                    continue
+                f = min(1.0 + scale * max(0.0, float(rel)), max_inflation)
+                if f == 1.0:
+                    continue
+                lat = self._lat[key]
+                lat.p = [lat.p[0] * f, lat.p[1] * f, lat.p[2] * f]
+                self._drop[key].p *= f
+                applied[key] = f
+        return applied
+
     # ---------------------------------------------------------- injection
     def _tier_correction(self, svc: str, tier: str) -> ServiceCorrection:
         lo_q, hi_q = self.q_mult_bounds

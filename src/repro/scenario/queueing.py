@@ -1,0 +1,51 @@
+"""Queueing-inflation knee shared by every analytic ranking tier.
+
+One curve, three callers: the online controller's scalar
+``ForecastModel``, the tier-1 vectorized ``ScreeningModel`` (numpy), and
+the batched fluid ensemble engine (``repro.fluid``, jax). The knee says:
+a work-conserving server fed deterministic slide-aligned arrivals is
+stable below saturation, inflates mildly approaching it, and cliffs at
+it (``NEVER_S`` — the backlog diverges and fires effectively never
+complete).
+
+The three variants are pinned bit-equal by ``tests/test_queueing.py``;
+edit the shape here, nowhere else.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NEVER_S = 1e9
+Q_KNEE = 0.7
+Q_CLIFF = 0.95
+
+
+def q_factor(u):
+    """Queueing inflation factor for utilization ``u``. Polymorphic:
+    a float returns a float, a numpy array maps elementwise."""
+    if isinstance(u, np.ndarray):
+        return q_factor_np(u)
+    if u >= Q_CLIFF:
+        return NEVER_S
+    if u <= Q_KNEE:
+        return 1.0
+    return 1.0 + (u - Q_KNEE) / (Q_CLIFF - u)
+
+
+def q_factor_np(u: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`q_factor` over a numpy array."""
+    out = np.ones_like(u)
+    mid = (u > Q_KNEE) & (u < Q_CLIFF)
+    out[mid] = 1.0 + (u[mid] - Q_KNEE) / (Q_CLIFF - u[mid])
+    out[u >= Q_CLIFF] = NEVER_S
+    return out
+
+
+def q_factor_jnp(u):
+    """jax.numpy twin of :func:`q_factor` (same knee/cliff/NEVER
+    semantics, safe under jit — the mid-branch denominator is guarded
+    because ``jnp.where`` evaluates both sides)."""
+    import jax.numpy as jnp
+    mid = 1.0 + (u - Q_KNEE) / jnp.maximum(Q_CLIFF - u, 1e-12)
+    return jnp.where(u >= Q_CLIFF, NEVER_S,
+                     jnp.where(u <= Q_KNEE, 1.0, mid))

@@ -29,31 +29,13 @@ import numpy as np
 
 from repro.placement.plan import SITE_DC, PlacementPlan, ServicePlacement
 
-# Deterministic-arrival queueing inflation, shared with the online
-# controller's ForecastModel (the single source of these knees): a
-# work-conserving server is stable below saturation, inflates mildly
-# approaching it, cliffs at it.
-NEVER_S = 1e9
-Q_KNEE = 0.7
-Q_CLIFF = 0.95
-
-
-def q_factor(u: float) -> float:
-    """Scalar queueing inflation (``ForecastModel`` uses this)."""
-    if u >= Q_CLIFF:
-        return NEVER_S
-    if u <= Q_KNEE:
-        return 1.0
-    return 1.0 + (u - Q_KNEE) / (Q_CLIFF - u)
-
-
-def _q_factor(u: np.ndarray) -> np.ndarray:
-    """Vectorized :func:`q_factor`."""
-    out = np.ones_like(u)
-    mid = (u > Q_KNEE) & (u < Q_CLIFF)
-    out[mid] = 1.0 + (u[mid] - Q_KNEE) / (Q_CLIFF - u[mid])
-    out[u >= Q_CLIFF] = NEVER_S
-    return out
+# Deterministic-arrival queueing inflation lives in
+# repro.scenario.queueing (one knee shared by ForecastModel, this
+# screen, and the jax fluid engine); re-exported here for callers that
+# historically imported it from the screen.
+from repro.scenario.queueing import (  # noqa: F401  (re-export)
+    NEVER_S, Q_CLIFF, Q_KNEE, q_factor, q_factor_np as _q_factor,
+)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,211 @@
+"""Property-based tests for the batched fluid ensemble engine
+(repro.fluid): fluid-vs-DES agreement on randomly drawn small
+scenarios, bit-identical jit vs eager execution, plan-batch permutation
+invariance, evaluate purity, and seeded ensemble determinism.
+
+Every property runs over a fixed case grid so the suite bites even
+without hypothesis installed; when hypothesis is available the same
+checks also run fuzzed (the test_screen_properties.py pattern)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: degrade to the fixed grid
+    HAVE_HYPOTHESIS = False
+
+from repro.fluid import FluidEngine, ScenarioEnsemble
+from repro.placement import PlacementPlan, ServicePlacement
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, scenario
+
+_SLO_KW = dict(soft_latency_s=2.0, hard_latency_s=10.0,
+               soft_energy_j=0.5, hard_energy_j=10.0)
+
+
+def _spec(base_hz: float = 4.0, n_things: int = 4, width_s: float = 60.0,
+          burst: bool = False):
+    """Two heterogeneous gateways + chained services, short horizon."""
+    rate = (RateSpec.bursts(base_hz, 2.5 * base_hz, [(60.0, 150.0)])
+            if burst else RateSpec.constant(base_hz))
+    return (scenario("fluid-prop")
+            .horizon(240.0)
+            .site("gw-a", edge=EdgeSpec(name="gw-a"),
+                  link=LinkSpec(uplink_bps=1e5, rtt_s=0.05,
+                                record_bytes=256.0))
+            .site("gw-b", edge=EdgeSpec(name="gw-b", flops_per_s=15e9),
+                  link=LinkSpec(uplink_bps=8e4, rtt_s=0.08,
+                                record_bytes=256.0))
+            .farm(n_things=n_things, seed=5, rate=rate, site="gw-a")
+            .service("agg", queue="neubotspeed", column="download_speed",
+                     agg="max", width_s=width_s, slide_s=width_s / 2)
+            .slo(**_SLO_KW).profile(flops_per_record=2e3)
+            .service("smooth", queue="agg_out", column="value", agg="mean",
+                     width_s=2 * width_s, slide_s=width_s)
+            .fed_by("agg")
+            .slo(**_SLO_KW).profile(flops_per_record=2e3)
+            .build())
+
+
+def _plans(names):
+    """A diverse fixed plan batch over both gateways and the DC."""
+    return [
+        PlacementPlan.all_edge(names, site="gw-a"),
+        PlacementPlan.all_edge(names, site="gw-b"),
+        PlacementPlan.all_dc(names, chips=4),
+        PlacementPlan.all_dc(names, chips=8),
+        PlacementPlan({"agg": ServicePlacement("gw-a"),
+                       "smooth": ServicePlacement("dc", chips=4)}),
+        PlacementPlan({"agg": ServicePlacement("dc", chips=4),
+                       "smooth": ServicePlacement("gw-b")}),
+    ]
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return _spec()
+
+
+@pytest.fixture(scope="module")
+def engine(spec):
+    return spec.compile()
+
+
+@pytest.fixture(scope="module")
+def fluid(engine):
+    return FluidEngine.compile(engine)
+
+
+# --------------------------------------------------------- DES agreement
+def _check_des_agreement(base_hz, n_things, width_s, burst, plan_idx):
+    """Fluid mean-VoS of the nominal realization stays within 5% of the
+    exact DES — or both tiers agree the plan is infeasible. (Eager
+    path: one-off scenarios should not pay an XLA trace each.)"""
+    eng = _spec(base_hz, n_things, width_s, burst).compile()
+    fl = FluidEngine.compile(eng)
+    plan = _plans(list(eng.order))[plan_idx]
+    f_vos = float(fl.evaluate([plan], jit=False).vos[0, 0])
+    des = eng.run_plan(plan)
+    if not des.feasible or not np.isfinite(f_vos):
+        assert not des.feasible and not np.isfinite(f_vos)
+        return
+    assert abs(f_vos - des.vos) <= 0.05 * max(abs(des.vos), 1e-9)
+
+
+@pytest.mark.parametrize("base_hz,n_things,width_s,burst,plan_idx", [
+    (4.0, 4, 60.0, False, 0),
+    (4.0, 4, 60.0, False, 2),
+    (1.5, 2, 30.0, False, 4),
+    (7.0, 4, 30.0, True, 1),
+    (6.0, 2, 60.0, True, 3),
+    (3.0, 4, 30.0, True, 5),
+])
+def test_fluid_tracks_des_fixed_grid(base_hz, n_things, width_s, burst,
+                                     plan_idx):
+    _check_des_agreement(base_hz, n_things, width_s, burst, plan_idx)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(base_hz=st.floats(1.0, 8.0), n_things=st.sampled_from([2, 4]),
+           width_s=st.sampled_from([30.0, 60.0]), burst=st.booleans(),
+           plan_idx=st.integers(0, 5))
+    def test_fluid_tracks_des_fuzzed(base_hz, n_things, width_s, burst,
+                                     plan_idx):
+        _check_des_agreement(base_hz, n_things, width_s, burst, plan_idx)
+
+
+# --------------------------------------------------------- jit identity
+def test_jit_matches_eager_bit_identical(fluid, engine):
+    """The jitted scan and the eager scan are the same float32 program:
+    VoS, latency and drop trajectories agree bit-for-bit on a small
+    batch (nominal realization)."""
+    plans = _plans(list(engine.order))
+    a = fluid.evaluate(plans, jit=True)
+    b = fluid.evaluate(plans, jit=False)
+    assert (a.vos == b.vos).all()
+    assert (a.vos_service == b.vos_service).all()
+    assert (a.lat_mean == b.lat_mean).all()
+    assert (a.drop_frac == b.drop_frac).all()
+    assert (a.vos_t == b.vos_t).all()
+
+
+def test_jit_matches_eager_on_small_ensemble(fluid, engine, spec):
+    """Same identity across a multi-realization ensemble batch."""
+    ens = ScenarioEnsemble.from_spec(spec, n=4, seed=3, engine=engine)
+    plans = _plans(list(engine.order))[:3]
+    a = ens.evaluate(plans, jit=True)
+    b = ens.evaluate(plans, jit=False)
+    assert a.vos.shape == (5, 3)  # n=4 perturbed + the nominal member
+    assert (a.vos == b.vos).all()
+    assert (a.drop_frac == b.drop_frac).all()
+
+
+# ------------------------------------------------- permutation invariance
+def _check_permutation(fluid, engine, seed):
+    """A plan's fluid score does not depend on its batch position or
+    companions: every per-(realization, plan) output commutes with any
+    permutation of the plan batch."""
+    plans = _plans(list(engine.order))
+    base = fluid.evaluate(plans)
+    perm = np.random.default_rng(seed).permutation(len(plans))
+    shuf = fluid.evaluate([plans[i] for i in perm])
+    assert (shuf.vos == base.vos[:, perm]).all()
+    assert (shuf.lat_mean == base.lat_mean[:, perm]).all()
+    assert (shuf.drop_frac == base.drop_frac[:, perm]).all()
+    assert [shuf.feasible[k] for k in range(len(perm))] == \
+           [base.feasible[i] for i in perm]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_plan_batch_permutation_invariance(fluid, engine, seed):
+    _check_permutation(fluid, engine, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_plan_batch_permutation_invariance_fuzzed(fluid, engine, seed):
+        _check_permutation(fluid, engine, seed)
+
+
+def test_evaluate_is_pure(fluid, engine):
+    """Repeated evaluation is bit-identical — no hidden state in the
+    lowered arrays or the jit cache."""
+    plans = _plans(list(engine.order))
+    a = fluid.evaluate(plans)
+    b = fluid.evaluate(plans)
+    assert (a.vos == b.vos).all()
+    assert (a.vos_t == b.vos_t).all()
+    assert (a.drop_t == b.drop_t).all()
+
+
+# ------------------------------------------------- ensemble determinism
+def test_ensemble_deterministic_per_seed(fluid, engine, spec):
+    """ScenarioEnsemble.from_spec is bit-deterministic per seed: the
+    lowered realization arrays and the fluid scores match across
+    constructions; a different seed perturbs them."""
+    plans = _plans(list(engine.order))[:3]
+    e1 = ScenarioEnsemble.from_spec(spec, n=5, seed=11, engine=engine)
+    e2 = ScenarioEnsemble.from_spec(spec, n=5, seed=11, engine=engine)
+    for k in e1.realizations:
+        assert (np.asarray(e1.realizations[k])
+                == np.asarray(e2.realizations[k])).all(), k
+    assert (e1.evaluate(plans).vos == e2.evaluate(plans).vos).all()
+    e3 = ScenarioEnsemble.from_spec(spec, n=5, seed=12, engine=engine)
+    assert any((np.asarray(e1.realizations[k])
+                != np.asarray(e3.realizations[k])).any()
+               for k in e1.realizations)
+
+
+def test_ensemble_realization_zero_is_nominal(fluid, engine, spec):
+    """With include_nominal=True (the default) realization 0 carries the
+    unperturbed base scenario: its scores match the single-realization
+    nominal evaluate."""
+    plans = _plans(list(engine.order))[:3]
+    ens = ScenarioEnsemble.from_spec(spec, n=4, seed=7, engine=engine)
+    nom = fluid.evaluate(plans)
+    assert ens.evaluate(plans).vos[0] == pytest.approx(nom.vos[0], rel=1e-5)

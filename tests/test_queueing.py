@@ -1,0 +1,82 @@
+"""The shared queueing-inflation helper (repro.scenario.queueing): the
+scalar, vectorized-numpy, and jnp variants must be the SAME function —
+bit-equal on every input — and the legacy import sites (screen's
+``q_factor``/``_q_factor``, the forecast model) must resolve to it."""
+import numpy as np
+import pytest
+
+from repro.scenario.queueing import (NEVER_S, Q_CLIFF, Q_KNEE, q_factor,
+                                     q_factor_np)
+
+
+def test_knee_semantics():
+    assert q_factor(0.0) == 1.0
+    assert q_factor(Q_KNEE) == 1.0
+    assert q_factor(Q_CLIFF) == NEVER_S
+    assert q_factor(2.0) == NEVER_S
+    u = 0.9
+    assert q_factor(u) == 1.0 + (u - Q_KNEE) / (Q_CLIFF - u)
+    assert q_factor(0.8) > 1.0
+
+
+def test_scalar_equals_numpy():
+    """Scalar and vectorized variants are bit-equal in float64 (the
+    precision the screen and forecast model run at)."""
+    u = np.concatenate([np.linspace(0.0, 1.2, 241),
+                        [Q_KNEE, Q_CLIFF, 0.9499999, 0.9500001]])
+    vec = q_factor_np(u)
+    scal = np.array([q_factor(float(x)) for x in u])
+    assert (vec == scal).all()
+
+
+def test_polymorphic_dispatch():
+    """q_factor accepts arrays and matches the vectorized variant."""
+    u = np.linspace(0.0, 1.1, 45)
+    assert (q_factor(u) == q_factor_np(u)).all()
+
+
+def test_jnp_equals_numpy_float32():
+    """The jnp variant (the fluid engine runs float32) is bit-equal to
+    the numpy variant evaluated at the same float32 precision."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.scenario.queueing import q_factor_jnp
+    u = np.linspace(0.0, 1.2, 121, dtype=np.float32)
+    j = np.asarray(q_factor_jnp(jnp.asarray(u)))
+    vec = q_factor_np(u).astype(np.float32)
+    assert j.dtype == np.float32
+    assert np.allclose(j, vec, rtol=2e-7, atol=0.0)
+    # exact in the flat regions; the mid-curve ratio may differ by the
+    # f32-vs-f64 rounding of a single divide, never more than 1 ULP
+    flat = (u <= Q_KNEE) | (u >= Q_CLIFF)
+    assert (j[flat] == vec[flat]).all()
+    ulp = np.spacing(np.maximum(np.abs(j), np.abs(vec)))
+    assert (np.abs(j - vec) <= ulp).all()
+
+
+def test_legacy_import_sites_share_the_helper():
+    from repro.scenario import screen
+    from repro.online import controller
+    assert screen.q_factor is q_factor
+    assert screen._q_factor is q_factor_np
+    assert controller.q_factor is q_factor
+    assert screen.NEVER_S == NEVER_S
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_property_scalar_vec_jnp_agree(seed):
+    """Random inputs: scalar == numpy bit-equal in float64; jnp within
+    1 float32 ULP of the numpy variant at float32."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.scenario.queueing import q_factor_jnp
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(0.0, 1.5, size=64)
+    scal = np.array([q_factor(float(x)) for x in u])
+    vec = q_factor_np(u)
+    assert (vec == scal).all()
+    u32 = u.astype(np.float32)
+    j = np.asarray(q_factor_jnp(jnp.asarray(u32)))
+    vec32 = q_factor_np(u32).astype(np.float32)
+    ulp = np.spacing(np.maximum(np.abs(j), np.abs(vec32)))
+    assert (np.abs(j - vec32) <= ulp).all()
