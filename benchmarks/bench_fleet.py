@@ -1,0 +1,193 @@
+"""Planet-scale hierarchical fleet benchmark (BENCH_fleet.json).
+
+One generated 500-site / 8-region scenario (seeded synthetic fleet,
+staggered per-region burst drift) carried end-to-end through the whole
+stack in minutes of wall clock:
+
+  search  — the decomposed per-region screened search (``region_search``:
+            block-coordinate screening over per-region candidate spaces,
+            global contention priced on full-width plans, exact-DES
+            re-scoring of finalists) must beat BOTH flat anchors —
+            all-DC and home-edge — on the exact DES.
+  online  — the warm-started online controller (per-epoch decomposed
+            ``region-exact`` re-planning seeded from the incumbent) must
+            beat the best static plan, including the forecast-searched
+            static on whole-horizon average rates, under drift.
+  determinism — the generator is a pure function of its spec (identical
+            ``to_dict`` digests) and the search is deterministic per
+            seed (identical winning plan keys on a re-run).
+
+``--smoke`` runs the same 500-site scenario with a single
+block-coordinate sweep and skips the oracle + re-search probes; the
+wall-clock gate is asserted so CI catches scaling regressions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Dict
+
+from repro.online.controller import (OnlineController, OracleController,
+                                     StaticController, plan_on_average_rates)
+from repro.placement.plan import PlacementPlan, ServicePlacement
+from repro.region import FleetGenSpec, generate_fleet, region_search
+
+N_SITES = 500
+N_REGIONS = 8
+SEED = 3
+WALL_GATE_S = {True: 300.0, False: 600.0}    # smoke, full
+
+
+def _out_path(smoke: bool) -> str:
+    name = "BENCH_fleet_smoke.json" if smoke else "BENCH_fleet.json"
+    return os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), name)
+
+
+def _spec_digest(spec) -> str:
+    return hashlib.sha256(
+        json.dumps(spec.to_dict(), sort_keys=True).encode()).hexdigest()
+
+
+def _home_edge(spec) -> PlacementPlan:
+    edge_of = {q: st.name for st in spec.sites for q in st.farm_queues}
+    return PlacementPlan({s.name: ServicePlacement(edge_of[s.name[:3] + "-q"])
+                          for s in spec.services})
+
+
+def main(csv_rows, smoke: bool = False) -> None:
+    print("\n== Planet-scale hierarchical fleet: decomposed search + "
+          "warm-started control ==")
+    t_bench = time.perf_counter()
+    gen = FleetGenSpec(n_sites=N_SITES, n_regions=N_REGIONS, seed=SEED,
+                       epoch_s=300.0, drift="bursts")
+
+    t0 = time.perf_counter()
+    spec = generate_fleet(gen)
+    cs = spec.compile()
+    t_compile = time.perf_counter() - t0
+    digest = _spec_digest(spec)
+    names = [s.name for s in spec.services]
+
+    # ---- decomposed search vs flat anchors ------------------------------
+    sweeps = 1 if smoke else 2
+    t0 = time.perf_counter()
+    sr = region_search(cs, chips_options=(4, 8), seed=0, sweeps=sweeps)
+    t_search = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_dc = cs.run_plan(PlacementPlan.all_dc(names, chips=8, dvfs_f=1.0))
+    r_home = cs.run_plan(_home_edge(spec))
+    t_base = time.perf_counter() - t0
+    beats_flat = (sr.result.vos >= r_dc.vos and sr.result.vos >= r_home.vos)
+    print(f"search: vos={sr.result.vos:.1f} (all-dc {r_dc.vos:.1f}, "
+          f"home-edge {r_home.vos:.1f}) screened={sr.screen['screened']} "
+          f"exact-evals={sr.evaluations} wall={t_search:.1f}s "
+          f"[beats-flat={beats_flat}]")
+
+    # ---- warm-started online vs statics ---------------------------------
+    true_rates = cs.true_epoch_rates()
+    avg = {s: sum(r[s] for r in true_rates) / len(true_rates)
+           for s in cs.order}
+    t0 = time.perf_counter()
+    searched_avg = plan_on_average_rates(cs.info(), avg,
+                                         chips_options=(4, 8))
+    statics: Dict[str, Dict] = {}
+    best_static = None
+    for label, plan in {"all-dc": PlacementPlan.all_dc(names, 8, 1.0),
+                        "home-edge": _home_edge(spec),
+                        "searched-avg": searched_avg}.items():
+        r = cs.run(StaticController(plan, label=f"static:{label}"))
+        statics[label] = {"vos": round(r.vos, 4)}
+        if best_static is None or r.vos > best_static[1].vos:
+            best_static = (label, r)
+    assert best_static is not None
+    r_online = cs.run(OnlineController(chips_options=(4, 8), window=1,
+                                       switch_margin=0.02, calibrate=True,
+                                       seed=0))
+    t_online = time.perf_counter() - t0
+    oracle_vos = None
+    if not smoke:
+        r_oracle = cs.run(OracleController(chips_options=(4, 8), seed=0))
+        oracle_vos = round(r_oracle.vos, 4)
+    epochs = r_online.summary()["epochs"]
+    methods = sorted({e.get("forecast", {}).get("search", {}).get("method")
+                      for e in epochs} - {None})
+    beats_static = r_online.vos > best_static[1].vos
+    conserved = r_online.ledger.conserved()
+    print(f"online: vos={r_online.vos:.1f} best-static "
+          f"{best_static[0]}={best_static[1].vos:.1f} "
+          f"oracle={oracle_vos} methods={methods} "
+          f"[beats-static={beats_static} conserved={conserved}]")
+
+    # ---- determinism ----------------------------------------------------
+    det_gen = _spec_digest(generate_fleet(gen)) == digest
+    det_search = None
+    if not smoke:
+        sr2 = region_search(spec.compile(), chips_options=(4, 8), seed=0,
+                            sweeps=sweeps)
+        det_search = sr2.plan.key() == sr.plan.key()
+    print(f"determinism: generator={det_gen} search={det_search}")
+
+    wall = time.perf_counter() - t_bench
+    wall_ok = wall <= WALL_GATE_S[smoke]
+    acceptance = {
+        "search_beats_flat_baselines": bool(beats_flat),
+        "online_beats_best_static": bool(beats_static),
+        "warm_started_region_search": bool(methods == ["region-exact"]),
+        "ledger_conserved": bool(conserved),
+        "generator_deterministic": bool(det_gen),
+        "wall_within_gate": bool(wall_ok),
+    }
+    if det_search is not None:
+        acceptance["search_deterministic"] = bool(det_search)
+    ok = all(acceptance.values())
+    report = {
+        "smoke": smoke,
+        "generated": {**dataclasses.asdict(gen),
+                      "sites": len(spec.sites),
+                      "regions": len(spec.regions),
+                      "services": len(spec.services),
+                      "spec_sha256": digest},
+        "search": {"vos": round(sr.result.vos, 4),
+                   "all_dc_vos": round(r_dc.vos, 4),
+                   "home_edge_vos": round(r_home.vos, 4),
+                   "stats": sr.stats(),
+                   "wall_s": round(t_search, 2),
+                   "baseline_wall_s": round(t_base, 2)},
+        "online": {"vos": round(r_online.vos, 4),
+                   "statics": statics,
+                   "best_static": {"label": best_static[0],
+                                   "vos": round(best_static[1].vos, 4)},
+                   "oracle_vos": oracle_vos,
+                   "search_methods": methods,
+                   "epochs": len(epochs),
+                   "wall_s": round(t_online, 2)},
+        "determinism": {"generator": bool(det_gen),
+                        "search": det_search},
+        "acceptance": {**acceptance, "pass": bool(ok)},
+        "compile_wall_s": round(t_compile, 2),
+        "wall_s": round(wall, 2),
+        "wall_gate_s": WALL_GATE_S[smoke],
+    }
+    out = _out_path(smoke)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    csv_rows.append(("fleet_region_search_vos", sr.result.vos * 1e3,
+                     f"{N_SITES}x{N_REGIONS}"))
+    csv_rows.append(("fleet_online_vos", r_online.vos * 1e3,
+                     best_static[0]))
+    print(f"500-site fleet end-to-end in {wall:.1f}s "
+          f"(gate {WALL_GATE_S[smoke]:.0f}s) -> "
+          f"{'PASS' if ok else 'FAIL'}; wrote {out}")
+    if smoke:
+        # CI gate: scaling or ranking regressions fail the smoke run
+        assert ok, f"fleet smoke gates failed: {acceptance}"
+
+
+if __name__ == "__main__":
+    import sys
+    rows: list = []
+    main(rows, smoke="--smoke" in sys.argv)

@@ -10,6 +10,10 @@
                                        plan choice, BENCH_robust.json)
   serve   -> bench_serve              (engine vs live runtime sim-to-real
                                        gap, BENCH_serve.json)
+  fleet   -> bench_fleet              (500-site hierarchical fleet:
+                                       decomposed region search +
+                                       warm-started online control,
+                                       BENCH_fleet.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
   §Roofline -> bench_roofline         (dry-run derived terms per cell)
 
@@ -35,7 +39,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,pipeline,placement,online,"
-                         "search,robust,serve,kernels,roofline")
+                         "search,robust,serve,fleet,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 scenario per stream bench at "
                          "reduced trace length")
@@ -47,8 +51,8 @@ def main() -> None:
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
     if (args.smoke or args.calibrate) and want is None:
-        want = {"placement", "online", "search", "robust", "serve"} \
-            if args.smoke else {"placement"}
+        want = {"placement", "online", "search", "robust", "serve",
+                "fleet"} if args.smoke else {"placement"}
 
     csv_rows: list = []
     failures = []
@@ -62,9 +66,9 @@ def main() -> None:
             failures.append((tag, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (bench_kernels, bench_online, bench_pipeline,
-                            bench_placement, bench_robust, bench_roofline,
-                            bench_search_perf, bench_serve,
+    from benchmarks import (bench_fleet, bench_kernels, bench_online,
+                            bench_pipeline, bench_placement, bench_robust,
+                            bench_roofline, bench_search_perf, bench_serve,
                             bench_value_heuristics, bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
     run("fig5", bench_power_capping.main, csv_rows,
@@ -76,6 +80,7 @@ def main() -> None:
     run("search", bench_search_perf.main, csv_rows, smoke=args.smoke)
     run("robust", bench_robust.main, csv_rows, smoke=args.smoke)
     run("serve", bench_serve.main, csv_rows, smoke=args.smoke)
+    run("fleet", bench_fleet.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)
 

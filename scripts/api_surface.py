@@ -40,6 +40,11 @@ SURFACE = {
         "EpochObservation", "OnlineController", "OracleController",
         "StaticController", "ForecastModel", "plan_on_average_rates",
         "diurnal", "piecewise_linear", "poisson_bursts", "step_bursts"),
+    "repro.region": (
+        "RegionSpec", "HierFleetSpec", "TRANSPARENT_RAP", "DEFAULT_RAP",
+        "regions_view", "FleetGenSpec", "generate_fleet", "hier_fleet_spec",
+        "RegionPartition", "partition_services", "region_search",
+        "region_search_exact"),
     "repro.serve": (
         "ServeRuntime", "ServeConfig", "serve_scenario", "VirtualClock",
         "ServeTelemetry", "StageFire", "ServiceStage", "FarmDriver",
@@ -68,6 +73,11 @@ def check_roundtrips() -> int:
     for make in bench_online.SCENARIOS:
         specs.append(make(smoke=True).spec)
         specs.append(make(smoke=False).spec)
+    # a generated hierarchical fleet (regions + RAP trunks, including
+    # infinite-bandwidth transparent links) must survive JSON too
+    from repro.region import FleetGenSpec, generate_fleet
+    specs.append(generate_fleet(FleetGenSpec(
+        n_sites=12, n_regions=3, seed=1, horizon_s=600.0)))
     bad = 0
     for spec in specs:
         back = ScenarioSpec.from_json(spec.to_json())

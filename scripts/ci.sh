@@ -64,6 +64,12 @@ if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     # engine agrees with the exact DES within 5%, sustains >= 50x the
     # sequential-DES scenario-evals/sec, and that the CVaR objective
     # strictly improves worst-quantile VoS with DES tail confirmation
-    # (robust-planning gate)
+    # (robust-planning gate),
+    # and bench_fleet --smoke, which *asserts* the 500-site hierarchical
+    # fleet is generated, searched (decomposed per-region screening +
+    # exact-DES finalists) and co-simulated under the wall-clock gate,
+    # with the decomposed search beating both flat anchors and the
+    # warm-started online controller beating the best static plan
+    # (planet-scale fleet gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

@@ -38,6 +38,7 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from repro.placement.plan import PlacementPlan
+from repro.region.hier import regions_view
 from repro.scenario.queueing import q_factor_jnp
 
 # Uplink utilization is clamped here before the queueing knee: overload
@@ -121,6 +122,34 @@ class FluidEngine:
         self.dl_user_s = (links[user].rtt_s / 2
                           + links[user].result_bytes
                           / links[user].downlink_bps)
+
+        # hierarchy: per-region edge tiers + RAP trunks. ``_hier`` is a
+        # *trace-time* flag: flat fleets take the original scalar-backlog
+        # program (byte-identical XLA — recorded fluid benchmarks stay
+        # exact), hierarchical ones a per-region [R]-vector twin.
+        regions = regions_view(fleet)
+        self.n_regions = len(regions)
+        rmap = {s: i for i, r in enumerate(regions) for s in r.sites}
+        self._region_of = np.array([rmap[n] for n in self.site_names],
+                                   dtype=int)
+        self._rap = [None if r.transparent else r.rap for r in regions]
+        self._hier = any(r is not None for r in self._rap)
+        self._rap_res_up = np.zeros(J)
+        self._rap_res_dn = np.zeros(J)
+        for j in range(J):
+            rap = self._rap[self._region_of[j]]
+            if rap is not None:
+                self._rap_res_up[j] = (rap.rtt_s / 2
+                                       + links[j].result_bytes
+                                       / rap.uplink_bps)
+                self._rap_res_dn[j] = (rap.rtt_s / 2
+                                       + links[j].result_bytes
+                                       / rap.downlink_bps)
+        rap_u = self._rap[self._region_of[user]]
+        if rap_u is not None:
+            self.dl_user_s += (rap_u.rtt_s / 2
+                               + links[user].result_bytes
+                               / rap_u.downlink_bps)
 
         # Per-service static facts -------------------------------------
         self.slide = np.empty(S)
@@ -262,6 +291,15 @@ class FluidEngine:
             uses_up=np.zeros((M, S)), qm=np.ones((M, S)),
             qb=np.zeros((M, S)), keep=np.ones((M, S)),
         )
+        if self._hier:
+            # per-move origin-region one-hot + RAP trunk leg coefficients
+            Z.update(
+                oreg=np.zeros((M, S, U, self.n_regions)),
+                rap_upsec_pr=np.zeros((M, S, U)),
+                rap_rtt=np.zeros((M, S, U)),
+                rap_dn_pr=np.zeros((M, S, U)),
+                rap_uses=np.zeros((M, S, U)),
+            )
         feasible = np.ones(M, dtype=bool)
         corr = dict(corrections or {})
         cost = self.engine.cost
@@ -303,8 +341,16 @@ class FluidEngine:
                 for u in self._ups[si]:
                     us = exec_site[self.rank[u]]
                     if my >= 0 and us != my:
-                        h = max(h, self._rtt[my] / 2
-                                + (self._rtt[us] / 2 if us >= 0 else 0.0))
+                        hh = (self._rtt[my] / 2
+                              + (self._rtt[us] / 2 if us >= 0 else 0.0))
+                        if self._hier and (
+                                us < 0 or self._region_of[us]
+                                != self._region_of[my]):
+                            # cross-region handoff: src RAP up + dst down
+                            if us >= 0:
+                                hh += self._rap_res_up[us]
+                            hh += self._rap_res_dn[my]
+                        h = max(h, hh)
                 Z["hop"][m, si] = h
                 if my >= 0:
                     for oi in range(si):
@@ -328,6 +374,24 @@ class FluidEngine:
                         Z["rtt_leg"][m, si, ui] += self._rtt[my] / 2
                         Z["dn_pr"][m, si, ui] = (self._dn_rec[my]
                                                  / self._dn_bps[my])
+                    if self._hier:
+                        rj = int(self._region_of[osite])
+                        Z["oreg"][m, si, ui, rj] = 1.0
+                        if my < 0 or self._region_of[my] != rj:
+                            rap = self._rap[rj]
+                            if rap is not None:
+                                Z["rap_uses"][m, si, ui] = 1.0
+                                Z["rap_upsec_pr"][m, si, ui] = (
+                                    self._wire_rec[osite] / rap.uplink_bps)
+                                Z["rap_rtt"][m, si, ui] = rap.rtt_s / 2
+                            if my >= 0:
+                                rapd = self._rap[self._region_of[my]]
+                                if rapd is not None:
+                                    Z["rap_rtt"][m, si, ui] += \
+                                        rapd.rtt_s / 2
+                                    Z["rap_dn_pr"][m, si, ui] = (
+                                        self._dn_rec[my]
+                                        / rapd.downlink_bps)
                 Z["uses_up"][m, si] = float(Z["act"][m, si].any())
             if stalls and m in stalls:
                 for s, until in stalls[m].items():
@@ -373,6 +437,7 @@ class FluidEngine:
         import jax.numpy as jnp
 
         S, J, U = len(self.order), len(self.site_names), self.U
+        R, hier = self.n_regions, self._hier
         dt = self.dt
         f32 = lambda a: jnp.asarray(a, dtype=jnp.float32)
         fires, nw, orig = f32(self.fires), f32(self.nw), f32(self.orig)
@@ -399,7 +464,10 @@ class FluidEngine:
 
         def one(plan, real):
             def step(carry, x):
-                B, Bup = carry
+                if hier:
+                    B, Bup, Brap = carry
+                else:
+                    B, Bup = carry
                 (fires_t, nw_t, orig_t, modw_t, mods_t,
                  fdown_t, recov_t, tb) = x
                 nwm = jnp.clip(nw_t * jnp.where(is_root > 0, modw_t, 1.0),
@@ -418,15 +486,42 @@ class FluidEngine:
                 farm_mod = jnp.where(is_root > 0, mods_t, 1.0)
                 modc = jnp.where(u0[None, :] > 0, farm_mod[:, None], 1.0)
                 c = orig_t * modc                                 # [S, U]
-                upsec = (plan["act"] * c * plan["upsec_pr"]).sum(-1)
-                up_work = (upsec * fires_t).sum()
-                q_up = q_factor_jnp(jnp.minimum(up_work / dt,
-                                                _UPLINK_Q_CLAMP))
-                haul = ((plan["act"]
-                         * (plan["rtt_leg"]
-                            + c * plan["upsec_pr"] * q_up
-                            + c * plan["dn_pr"])).sum(-1)
-                        + plan["uses_up"] * Bup)
+                if hier:
+                    # per-region twins of the scalar edge-tier terms,
+                    # plus the RAP-trunk second tier: every per-move
+                    # quantity is routed through the move's *origin
+                    # region* one-hot (oreg), so each region's pipe and
+                    # trunk carries exactly its own traffic
+                    oreg = plan["oreg"]                       # [S, U, R]
+                    upsec_su = plan["act"] * c * plan["upsec_pr"]
+                    up_work_r = jnp.einsum(
+                        "su,sur->r", upsec_su * fires_t[:, None], oreg)
+                    q_up_su = (oreg @ q_factor_jnp(jnp.minimum(
+                        up_work_r / dt, _UPLINK_Q_CLAMP)))    # [S, U]
+                    rapsec_su = plan["act"] * c * plan["rap_upsec_pr"]
+                    rap_work_r = jnp.einsum(
+                        "su,sur->r", rapsec_su * fires_t[:, None], oreg)
+                    q_rap_su = (oreg @ q_factor_jnp(jnp.minimum(
+                        rap_work_r / dt, _UPLINK_Q_CLAMP)))
+                    haul = ((plan["act"]
+                             * (plan["rtt_leg"]
+                                + c * plan["upsec_pr"] * q_up_su
+                                + c * plan["dn_pr"]
+                                + plan["rap_rtt"]
+                                + c * plan["rap_upsec_pr"] * q_rap_su
+                                + c * plan["rap_dn_pr"])).sum(-1)
+                            + (plan["act"] * (oreg @ Bup)).max(-1)
+                            + (plan["rap_uses"] * (oreg @ Brap)).max(-1))
+                else:
+                    upsec = (plan["act"] * c * plan["upsec_pr"]).sum(-1)
+                    up_work = (upsec * fires_t).sum()
+                    q_up = q_factor_jnp(jnp.minimum(up_work / dt,
+                                                    _UPLINK_Q_CLAMP))
+                    haul = ((plan["act"]
+                             * (plan["rtt_leg"]
+                                + c * plan["upsec_pr"] * q_up
+                                + c * plan["dn_pr"])).sum(-1)
+                            + plan["uses_up"] * Bup)
                 demand = (isdc * plan["chips"] * dur_d * fires_t).sum() / dt
                 dc_over = jnp.maximum(1.0, demand / grid)
                 rw = plan["alignsite"] @ edge_work
@@ -446,14 +541,20 @@ class FluidEngine:
                               gamma * (wp * vp + we * ve), 0.0)
                 v = v * plan["keep"]
                 B2 = jnp.maximum(B + work_j - dt * (1.0 - fdown_t), 0.0)
-                Bup2 = jnp.maximum(Bup + up_work - dt, 0.0)
                 ys = (v * fires_t, lat * fires_t,
                       jnp.where(v <= 0.0, fires_t, 0.0))
+                if hier:
+                    Bup2 = jnp.maximum(Bup + up_work_r - dt, 0.0)
+                    Brap2 = jnp.maximum(Brap + rap_work_r - dt, 0.0)
+                    return (B2, Bup2, Brap2), ys
+                Bup2 = jnp.maximum(Bup + up_work - dt, 0.0)
                 return (B2, Bup2), ys
 
             xs = (fires, nw, orig, real["modw"], real["mods"],
                   real["fdown"], real["recover"], t_bins)
-            _, ys = lax.scan(step, (jnp.zeros(J), jnp.zeros(())), xs)
+            carry0 = ((jnp.zeros(J), jnp.zeros(R), jnp.zeros(R)) if hier
+                      else (jnp.zeros(J), jnp.zeros(())))
+            _, ys = lax.scan(step, carry0, xs)
             return ys
 
         def batch(plans, reals):

@@ -26,6 +26,7 @@ from repro.core.value import task_value
 from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
 from repro.placement.search import search_placement
+from repro.region.hier import regions_view
 from repro.scenario.observe import BridgeInfo, EpochObservation
 from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
 from repro.scenario.queueing import q_factor
@@ -63,6 +64,21 @@ class ForecastModel:
         self.down = dict(down or {})
         self.corrections = dict(corrections or {})
         self._nodes = {s.name: EdgeNode(s.edge) for s in info.fleet.sites}
+        # hierarchy: per-region edge tiers + RAP trunks (flat fleets are
+        # one transparent region — every trunk term is zero and the
+        # forecast stays bit-identical to the single-uplink model)
+        regs = regions_view(info.fleet)
+        self._region_of = {s: i for i, r in enumerate(regs)
+                           for s in r.sites}
+        self._rap = [None if r.transparent else r.rap for r in regs]
+        self._hier = any(r is not None for r in self._rap)
+
+    def _crosses(self, src: str, dst: str) -> bool:
+        """True when a src→dst transfer transits the DC core (mirrors
+        ``Fleet._crosses_core``)."""
+        if src == SITE_DC or dst == SITE_DC:
+            return True
+        return self._region_of[src] != self._region_of[dst]
 
     # ------------------------------------------------------------- helpers
     def _n_window(self, svc: str) -> float:
@@ -103,9 +119,16 @@ class ForecastModel:
             return ForecastResult(float("-inf"), False, plan.label,
                                   str(e)), {}
 
+        # group placements by site once — per-site passes below stay
+        # O(services), not O(sites × services) (a 500-site fleet used to
+        # pay the product on every plan evaluation)
+        placed_by_site: Dict[str, List[str]] = {}
+        for s in order:
+            placed_by_site.setdefault(plan.site(s), []).append(s)
+
         # hard feasibility: down sites host nothing; RAM fits
         for name in sites:
-            placed = [s for s in order if plan.site(s) == name]
+            placed = placed_by_site.get(name)
             if not placed:
                 continue
             if self.down.get(name):
@@ -117,20 +140,22 @@ class ForecastModel:
                 return ForecastResult(float("-inf"), False, plan.label,
                                       f"site {name}: RAM"), {}
 
-        # device utilization per site; shared-uplink serialization load
+        # device utilization per hosting site; per-region edge-tier and
+        # RAP-trunk serialization load
         util: Dict[str, float] = {}
-        for name in sites:
+        for name, placed in placed_by_site.items():
+            if name == SITE_DC:
+                continue
             node = self._nodes[name]
             u = 0.0
-            for s in order:
-                if plan.site(s) != name:
-                    continue
+            for s in placed:
                 i = info.services[s]
                 u += node.fire_time(int(self._n_window(s)),
                                     info.profiles[s].flops_per_record) \
                     / i.slide_s
             util[name] = u
-        up_load = 0.0
+        up_load = [0.0] * len(self._rap)
+        rap_load = [0.0] * len(self._rap)
         for s in order:
             i = info.services[s]
             src = self._origin_site(s, plan)
@@ -139,7 +164,13 @@ class ForecastModel:
                 continue
             net = info.fleet.site(src).link
             wire = self._n_new(s) * net.record_bytes * net.compression
-            up_load += wire / net.uplink_bps / i.slide_s
+            rj = self._region_of[src]
+            up_load[rj] += wire / net.uplink_bps / i.slide_s
+            rap = self._rap[rj]
+            if rap is not None and self._crosses(src, dst):
+                rap_load[rj] += wire / rap.uplink_bps / i.slide_s
+        q_up = [q_factor(x) for x in up_load]
+        q_rap = [q_factor(x) for x in rap_load]
 
         # q_factor (repro.scenario.screen, shared with the vectorized
         # plan screen): deterministic slide-aligned arrivals — a work-
@@ -196,7 +227,7 @@ class ForecastModel:
                 node = self._nodes[p.site]
                 base = fire_s[s]
                 lat = (base + rank_wait(s)) * q_factor(util[p.site]) + hop
-                lat += self._haul_s(s, plan, n_new, q_factor(up_load))
+                lat += self._haul_s(s, plan, n_new, q_up, q_rap)
                 # mirror EdgeNode.execute_fire: the ingest term covers
                 # the whole window, not just the newly covered records
                 energy = (n_win * node.spec.energy_per_record_j
@@ -206,12 +237,22 @@ class ForecastModel:
                 xfer = 0.0
                 if src != SITE_DC:
                     net = info.fleet.site(src).link
+                    rj = self._region_of[src]
                     wire = n_new * net.record_bytes * net.compression
                     xfer = (net.rtt_s / 2
-                            + wire / net.uplink_bps * q_factor(up_load))
+                            + wire / net.uplink_bps * q_up[rj])
+                    rap = self._rap[rj]
+                    if rap is not None:   # edge→DC always transits the core
+                        xfer += (rap.rtt_s / 2
+                                 + wire / rap.uplink_bps * q_rap[rj])
                 t_step = info.cost.time_per_step(f"svc:{s}", "window",
                                                  p.chips, p.dvfs_f)
                 dl = info.fleet.site(user).link.rtt_s / 2
+                rap_u = self._rap[self._region_of[user]]
+                if rap_u is not None:   # DC results ride the user trunk down
+                    dl += (rap_u.rtt_s / 2
+                           + info.fleet.site(user).link.result_bytes
+                           / rap_u.downlink_bps)
                 lat = (hop + xfer + self._dc_steps(s) * t_step * dc_over
                        + dl)
                 energy = self._dc_steps(s) * info.cost.energy_per_step(
@@ -243,7 +284,8 @@ class ForecastModel:
         return self.info.fleet.farm_site(self.info.services[svc].queue)
 
     def _upstream_hop_s(self, svc: str, plan: PlacementPlan) -> float:
-        """Result-handoff latency from upstream cuts."""
+        """Result-handoff latency from upstream cuts (cross-region cuts
+        additionally ride the src RAP up and the dst RAP down)."""
         t = 0.0
         my = plan.site(svc)
         for u in self.topology[svc]:
@@ -251,24 +293,51 @@ class ForecastModel:
             if us == my or my == SITE_DC:
                 continue
             if us == SITE_DC:
-                t = max(t, self.info.fleet.site(my).link.rtt_s / 2)
+                h = self.info.fleet.site(my).link.rtt_s / 2
             else:
-                t = max(t, self.info.fleet.site(us).link.rtt_s / 2
-                        + self.info.fleet.site(my).link.rtt_s / 2)
+                h = (self.info.fleet.site(us).link.rtt_s / 2
+                     + self.info.fleet.site(my).link.rtt_s / 2)
+            if self._hier and self._crosses(us, my):
+                if us != SITE_DC:
+                    rap = self._rap[self._region_of[us]]
+                    if rap is not None:
+                        h += (rap.rtt_s / 2
+                              + self.info.fleet.site(us).link.result_bytes
+                              / rap.uplink_bps)
+                rapd = self._rap[self._region_of[my]]
+                if rapd is not None:
+                    h += (rapd.rtt_s / 2
+                          + self.info.fleet.site(my).link.result_bytes
+                          / rapd.downlink_bps)
+            t = max(t, h)
         return t
 
     def _haul_s(self, svc: str, plan: PlacementPlan, n_new: float,
-                up_factor: float) -> float:
-        """Cross-site raw-record haul onto an edge placement."""
+                q_up: Sequence[float], q_rap: Sequence[float]) -> float:
+        """Cross-site raw-record haul onto an edge placement
+        (cross-region: plus the src RAP trunk up, contended, and the dst
+        RAP trunk down)."""
         src, dst = self._origin_site(svc, plan), plan.site(svc)
         if src == dst or src == SITE_DC:
             return 0.0
         snet = self.info.fleet.site(src).link
         dnet = self.info.fleet.site(dst).link
+        rj = self._region_of[src]
         wire = n_new * snet.record_bytes * snet.compression
-        return (snet.rtt_s / 2 + wire / snet.uplink_bps * up_factor
+        base = (snet.rtt_s / 2 + wire / snet.uplink_bps * q_up[rj]
                 + dnet.rtt_s / 2
                 + n_new * dnet.record_bytes / dnet.downlink_bps)
+        if not self._hier or not self._crosses(src, dst):
+            return base
+        extra = 0.0
+        rap = self._rap[rj]
+        if rap is not None:
+            extra += rap.rtt_s / 2 + wire / rap.uplink_bps * q_rap[rj]
+        rapd = self._rap[self._region_of[dst]]
+        if rapd is not None:
+            extra += (rapd.rtt_s / 2
+                      + n_new * dnet.record_bytes / rapd.downlink_bps)
+        return base + extra
 
 
 # ---------------------------------------------------------------------------
@@ -488,8 +557,13 @@ class OnlineController:
         up_sites = tuple(s for s in self.info.fleet.site_names
                          if not down.get(s))
         edge_sites = up_sites or self.info.fleet.site_names
+        # on hierarchical fleets the front door routes to the decomposed
+        # per-region search; the incumbent plan warm-starts it so steady
+        # epochs cost a handful of model calls (ignored on flat fleets —
+        # the joint search stays bit-identical)
         sr = search_placement(model, self.chips_options, self.dvfs_options,
-                              seed=self.seed, edge_sites=edge_sites)
+                              seed=self.seed, edge_sites=edge_sites,
+                              warm_start=self.current)
         best = sr.plan
         risk_entry = None
         if self.risk is not None:

@@ -7,14 +7,28 @@ sharing one contended WAN uplink: concurrent uplink transfers (record
 hauls, DC offloads, migration state) serialize FIFO through the shared
 pipe, so one site's burst delays every site's offloads.
 
-Routing between placement sites:
+A fleet can also be *hierarchical* (``repro.region.HierFleetSpec``):
+sites are partitioned into regions, each with its own shared edge-tier
+pipe (the per-region twin of the flat fleet's single uplink) and a
+regional aggregation point (RAP) whose trunk link to the DC core is a
+second FIFO tier. :class:`Fleet` duck-types the hierarchy off the
+spec's ``regions`` attribute, so the flat ``FleetSpec`` remains a
+degenerate one-region hierarchy with a *transparent* RAP (infinite
+trunk bandwidth, zero RTT — contributes nothing, bit-identically).
 
-  edge→DC    src site's uplink through the shared FIFO, half-RTT after
-             serialization completes.
-  DC→edge    dst site's downlink (uncontended direction).
+Routing between placement sites (flat; [RAP] legs apply only to
+non-transparent hierarchies):
+
+  edge→DC    src site's uplink through its region's edge-tier FIFO,
+             half-RTT after serialization completes [then the RAP trunk
+             FIFO + half trunk RTT].
+  DC→edge    [RAP trunk downlink, uncontended] then the dst site's
+             downlink (uncontended direction).
   edge→edge  relayed through the backhaul: src uplink (FIFO) then the
              dst site's downlink — a pipeline cut spanning two gateways
-             pays both legs.
+             pays both legs [cross-region cuts additionally pay the src
+             RAP trunk up and the dst RAP trunk down; same-region cuts
+             turn around at the RAP and never touch the trunk].
 
 Sites can fail and recover (drift scenarios): while a site is down its
 device executes nothing — fires queue until recovery (the outage windows
@@ -24,11 +38,20 @@ services off the site at the next epoch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.placement.edge import EdgeNode, EdgeSpec, FireExec
 from repro.placement.network import LinkSpec, NetworkModel
 from repro.placement.plan import SITE_DC
+
+
+def transparent_link(link: LinkSpec) -> bool:
+    """True when ``link`` is a transparent (no-op) pipe — the degenerate
+    RAP that makes a flat fleet and a one-region hierarchy bit-identical
+    (infinite bandwidth, zero RTT, zero per-byte energy)."""
+    return (math.isinf(link.uplink_bps) and math.isinf(link.downlink_bps)
+            and link.rtt_s == 0.0 and link.energy_per_byte_j == 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,35 +90,39 @@ class FleetSpec:
                 queues[q] = s.name
         if self.user_site and self.user_site not in names:
             raise ValueError(f"user_site {self.user_site!r} not in {names}")
+        # O(1) lookup caches (a 500-site fleet is queried per service per
+        # plan evaluation; the linear scans used to dominate)
+        object.__setattr__(self, "_site_by_name",
+                           {s.name: s for s in self.sites})
+        object.__setattr__(self, "_site_of_queue", dict(queues))
 
     @property
     def site_names(self) -> Tuple[str, ...]:
         return tuple(s.name for s in self.sites)
 
     def site(self, name: str) -> SiteSpec:
-        for s in self.sites:
-            if s.name == name:
-                return s
-        raise KeyError(name)
+        try:
+            return self._site_by_name[name]
+        except KeyError:
+            raise KeyError(name) from None
 
     def farm_site(self, queue: str) -> str:
         """Site whose farm publishes into ``queue``; unpinned queues
         default to the first site (the classic single-gateway reading)."""
-        for s in self.sites:
-            if queue in s.farm_queues:
-                return s.name
-        return self.sites[0].name
+        return self._site_of_queue.get(queue, self.sites[0].name)
 
     @property
     def result_site(self) -> str:
         return self.user_site or self.sites[0].name
 
 
-class ContendedUplink:
-    """FIFO serialization of the shared WAN uplink: a transfer occupies
-    the pipe for its serialization time; concurrent transfers queue in
+class LinkQueue:
+    """FIFO serialization of one shared pipe: a transfer occupies the
+    pipe for its serialization time; concurrent transfers queue in
     admission order. Propagation (half-RTT) overlaps and does not hold
-    the pipe."""
+    the pipe. One instance per contended tier — the flat fleet's shared
+    WAN uplink, a region's edge-tier pipe, or a RAP's trunk to the DC
+    core."""
 
     def __init__(self):
         self.busy_until = 0.0
@@ -109,6 +136,12 @@ class ContendedUplink:
         self.busy_until = start + serialization_s
         self.transfers += 1
         return start
+
+
+class ContendedUplink(LinkQueue):
+    """The flat fleet's single shared WAN uplink — now just a
+    :class:`LinkQueue` under its historical name (kept because it is
+    part of the public ``repro.online`` surface)."""
 
 
 class EdgeSite:
@@ -153,8 +186,10 @@ class EdgeSite:
 
 
 class Fleet:
-    """Live multi-site topology: per-site devices and links plus the one
-    contended uplink every site's WAN transfers serialize through."""
+    """Live multi-site topology: per-site devices and links plus the
+    contended shared pipes every WAN transfer serializes through — one
+    uplink for a flat fleet, a per-region edge tier + per-region RAP
+    trunk for a hierarchical one (``spec.regions``, duck-typed)."""
 
     def __init__(self, spec: FleetSpec,
                  outages: Optional[Mapping[str, Sequence[Tuple[float, float]]]]
@@ -166,10 +201,65 @@ class Fleet:
             raise ValueError(f"outages for unknown sites: {sorted(unknown)}")
         self.sites: Dict[str, EdgeSite] = {
             s.name: EdgeSite(s, outages.get(s.name, ())) for s in spec.sites}
-        self.uplink = ContendedUplink()
+
+        regions = tuple(getattr(spec, "regions", ()) or ())
+        if regions:
+            self.region_names: Tuple[str, ...] = tuple(r.name for r in regions)
+            self._region_of: Dict[str, int] = {
+                site: i for i, r in enumerate(regions) for site in r.sites}
+            self._edge_q: List[LinkQueue] = [LinkQueue() for _ in regions]
+            self._rap_q: List[LinkQueue] = [LinkQueue() for _ in regions]
+            # transparent RAPs short-circuit (None): the degenerate
+            # one-region hierarchy routes bit-identically to a flat fleet
+            self._rap: List[Optional[NetworkModel]] = [
+                None if transparent_link(r.rap) else NetworkModel(r.rap)
+                for r in regions]
+        else:
+            self.region_names = ("fleet",)
+            self._region_of = {name: 0 for name in spec.site_names}
+            self._edge_q = [LinkQueue()]
+            self._rap_q = [LinkQueue()]
+            self._rap = [None]
+        # historical name: the (first) edge-tier shared pipe
+        self.uplink: LinkQueue = self._edge_q[0]
 
     def site(self, name: str) -> EdgeSite:
         return self.sites[name]
+
+    def region_of(self, site: str) -> int:
+        return self._region_of[site]
+
+    # ---------------------------------------------------------- RAP legs
+    def _rap_up(self, region: int, wire_bytes: float, t: float) -> float:
+        """Trunk leg RAP→DC-core: FIFO-contended serialization plus half
+        the trunk RTT; accounts trunk bytes/energy. No-op when the RAP
+        is transparent."""
+        net = self._rap[region]
+        if net is None:
+            return t
+        ser = wire_bytes / net.spec.uplink_bps
+        start = self._rap_q[region].admit(t, ser)
+        net.bytes_up += wire_bytes
+        net.energy_j += wire_bytes * net.spec.energy_per_byte_j
+        return start + ser + net.spec.rtt_s / 2
+
+    def _rap_down(self, region: int, wire_bytes: float, t: float) -> float:
+        """Trunk leg DC-core→RAP (uncontended direction, like a site
+        downlink); accounts trunk bytes/energy."""
+        net = self._rap[region]
+        if net is None:
+            return t
+        net.bytes_down += wire_bytes
+        net.energy_j += wire_bytes * net.spec.energy_per_byte_j
+        return t + net.spec.rtt_s / 2 + wire_bytes / net.spec.downlink_bps
+
+    def _crosses_core(self, src: str, dst: str) -> bool:
+        """True when a src→dst transfer transits the DC core (leaves the
+        src region / enters the dst region) rather than turning around
+        inside one region."""
+        if src == SITE_DC or dst == SITE_DC:
+            return True
+        return self._region_of[src] != self._region_of[dst]
 
     # ------------------------------------------------------------- routing
     def ship_records(self, src: str, dst: str, n_records: int,
@@ -179,14 +269,22 @@ class Fleet:
         if n_records <= 0 or src == dst:
             return ready_ts
         t = ready_ts
+        cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
             ser = site.net.uplink_serialization_s(n_records)
-            start = self.uplink.admit(t, ser)
+            start = self._edge_q[self._region_of[src]].admit(t, ser)
             site.net.uplink(n_records)          # bytes + NIC energy
             t = start + ser + site.net.spec.rtt_s / 2
+            if cross:
+                t = self._rap_up(self._region_of[src],
+                                 site.net.uplink_wire_bytes(n_records), t)
         if dst != SITE_DC:
-            t += self.sites[dst].net.downlink_records(n_records)
+            dsite = self.sites[dst]
+            if cross:
+                t = self._rap_down(self._region_of[dst],
+                                   n_records * dsite.net.spec.record_bytes, t)
+            t += dsite.net.downlink_records(n_records)
         return t
 
     def ship_result(self, src: str, dst: str, ready_ts: float) -> float:
@@ -196,35 +294,48 @@ class Fleet:
         if src == dst:
             return ready_ts
         t = ready_ts
+        cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
             ser = site.net.spec.result_bytes / site.net.spec.uplink_bps
-            start = self.uplink.admit(t, ser)
+            start = self._edge_q[self._region_of[src]].admit(t, ser)
             site.net.bytes_up += site.net.spec.result_bytes
             site.net.energy_j += (site.net.spec.result_bytes
                                   * site.net.spec.energy_per_byte_j)
             t = start + ser + site.net.spec.rtt_s / 2
+            if cross:
+                t = self._rap_up(self._region_of[src],
+                                 site.net.spec.result_bytes, t)
         if dst != SITE_DC:
-            t += self.sites[dst].net.downlink(1)
+            dsite = self.sites[dst]
+            if cross:
+                t = self._rap_down(self._region_of[dst],
+                                   dsite.net.spec.result_bytes, t)
+            t += dsite.net.downlink(1)
         return t
 
     def ship_state(self, src: str, dst: str, state_bytes: float,
                    ready_ts: float) -> float:
         """Migration state transfer (operator buffer shipped under a new
-        placement plan). Occupies the shared uplink like any transfer —
+        placement plan). Occupies the shared pipes like any transfer —
         a migration storm visibly delays record offloads."""
         if state_bytes <= 0 or src == dst:
             return ready_ts
         t = ready_ts
+        cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
             ser = state_bytes / site.net.spec.uplink_bps
-            start = self.uplink.admit(t, ser)
+            start = self._edge_q[self._region_of[src]].admit(t, ser)
             site.net.bytes_up += state_bytes
             site.net.energy_j += state_bytes * site.net.spec.energy_per_byte_j
             t = start + ser + site.net.spec.rtt_s / 2
+            if cross:
+                t = self._rap_up(self._region_of[src], state_bytes, t)
         if dst != SITE_DC:
             site = self.sites[dst]
+            if cross:
+                t = self._rap_down(self._region_of[dst], state_bytes, t)
             t += (site.net.spec.rtt_s / 2
                   + state_bytes / site.net.spec.downlink_bps)
             site.net.bytes_down += state_bytes
@@ -233,17 +344,38 @@ class Fleet:
 
     def downlink_time(self, dst: str) -> float:
         """Propagation+wire time of one result onto ``dst``'s downlink
-        (no accounting — used for SLO shifts)."""
-        return self.sites[dst].net.downlink_time(1)
+        (no accounting — used for SLO shifts). Results surfacing from
+        the DC core additionally ride the dst region's RAP trunk down
+        in a hierarchy."""
+        t = self.sites[dst].net.downlink_time(1)
+        net = self._rap[self._region_of[dst]]
+        if net is not None:
+            t += (net.spec.rtt_s / 2
+                  + self.sites[dst].net.spec.result_bytes
+                  / net.spec.downlink_bps)
+        return t
 
     # ---------------------------------------------------------- accounting
+    @property
+    def uplink_wait_s(self) -> float:
+        """Total FIFO queue wait across every contended tier (edge-tier
+        pipes + RAP trunks). Flat fleets: exactly the single uplink's."""
+        return (sum(q.queue_wait_s for q in self._edge_q)
+                + sum(q.queue_wait_s for q in self._rap_q))
+
+    @property
+    def uplink_transfers(self) -> int:
+        return (sum(q.transfers for q in self._edge_q)
+                + sum(q.transfers for q in self._rap_q))
+
     @property
     def edge_energy_j(self) -> float:
         return sum(s.node.energy_j for s in self.sites.values())
 
     @property
     def network_energy_j(self) -> float:
-        return sum(s.net.energy_j for s in self.sites.values())
+        return (sum(s.net.energy_j for s in self.sites.values())
+                + sum(n.energy_j for n in self._rap if n is not None))
 
     @property
     def bytes_up(self) -> float:
@@ -259,3 +391,19 @@ class Fleet:
                        "bytes_up": int(site.net.bytes_up),
                        "bytes_down": int(site.net.bytes_down)}
                 for name, site in self.sites.items()}
+
+    def per_region_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-region tier accounting: edge-tier FIFO wait/transfers and
+        RAP trunk wait/transfers/bytes (zeros for transparent RAPs)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for i, name in enumerate(self.region_names):
+            rap = self._rap[i]
+            out[name] = {
+                "edge_fifo_wait_s": round(self._edge_q[i].queue_wait_s, 3),
+                "edge_transfers": self._edge_q[i].transfers,
+                "rap_fifo_wait_s": round(self._rap_q[i].queue_wait_s, 3),
+                "rap_transfers": self._rap_q[i].transfers,
+                "rap_bytes_up": int(rap.bytes_up) if rap else 0,
+                "rap_bytes_down": int(rap.bytes_down) if rap else 0,
+            }
+        return out

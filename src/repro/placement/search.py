@@ -538,7 +538,10 @@ def search_placement(cosim: CoSimulator,
                      edge_sites: Sequence[str] = (SITE_EDGE,),
                      screen: Optional[bool] = None,
                      top_k: Optional[int] = None,
-                     corrections=None) -> SearchResult:
+                     corrections=None,
+                     partition: Optional[bool] = None,
+                     warm_start: Optional[PlacementPlan] = None
+                     ) -> SearchResult:
     """Front door. When the scorer can build a tier-1 screening model
     (the unified ``ScenarioEngine`` can; analytic scorers like the
     online ``ForecastModel`` cannot) the two-tier screened search is
@@ -549,10 +552,32 @@ def search_placement(cosim: CoSimulator,
     set to a multi-gateway fleet; the evaluator must understand those
     site names. ``corrections`` threads forecast-calibration state into
     the tier-1 screen (ignored on the exact-only path, whose scorer —
-    e.g. a calibrated ``ForecastModel`` — carries its own)."""
+    e.g. a calibrated ``ForecastModel`` — carries its own).
+
+    ``partition`` routes hierarchical fleets to the decomposed
+    per-region search (:func:`repro.region.search.region_search` /
+    ``region_search_exact``): ``None`` auto-detects declared regions on
+    the scorer's fleet, ``True`` forces it, ``False`` keeps the joint
+    search. ``warm_start`` seeds the decomposed path with an incumbent
+    plan (the online controller's epoch loop)."""
     ev = evaluator or Evaluator(cosim)
     if screen is None:
         screen = ev.screener is not None
+    if partition is None:
+        fleet = getattr(getattr(cosim, "cfg", None), "fleet", None) \
+            or getattr(getattr(cosim, "info", None), "fleet", None) \
+            or getattr(cosim, "fleet", None)
+        partition = bool(getattr(fleet, "regions", ()))
+    if partition:
+        from repro.region.search import region_search, region_search_exact
+        if screen:
+            return region_search(cosim, chips_options, dvfs_options,
+                                 seed=seed, evaluator=ev,
+                                 warm_start=warm_start,
+                                 corrections=corrections)
+        return region_search_exact(cosim, chips_options, dvfs_options,
+                                   seed=seed, evaluator=ev,
+                                   warm_start=warm_start)
     if screen:
         return screened_search(cosim, chips_options, dvfs_options,
                                seed=seed, top_k=top_k, evaluator=ev,

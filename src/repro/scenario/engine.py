@@ -922,8 +922,8 @@ class ScenarioEngine:
             network_energy_j=self._fleet.network_energy_j,
             dc_energy_j=sim_result.total_energy_j,
             bytes_up=self._fleet.bytes_up, bytes_down=self._fleet.bytes_down,
-            uplink_wait_s=self._fleet.uplink.queue_wait_s,
-            uplink_transfers=self._fleet.uplink.transfers,
+            uplink_wait_s=self._fleet.uplink_wait_s,
+            uplink_transfers=self._fleet.uplink_transfers,
             migrations=n_migs, ledger=ledger, per_site=per_site,
             per_service=per_service, epochs=epoch_meta, dc=sim_result)
 

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.placement.plan import SITE_DC, PlacementPlan, ServicePlacement
+from repro.region.hier import regions_view
 
 # Deterministic-arrival queueing inflation lives in
 # repro.scenario.queueing (one knee shared by ForecastModel, this
@@ -101,6 +102,39 @@ class ScreeningModel:
         self.dl_user_s = (self._link[user].rtt_s / 2
                           + self._link[user].result_bytes
                           / self._link[user].downlink_bps)
+
+        # hierarchy: per-region edge tiers + RAP trunks. A flat fleet is
+        # the degenerate single transparent region — every added term is
+        # zero there and the screened scores stay bit-identical.
+        regions = regions_view(fleet)
+        self.n_regions = len(regions)
+        self.region_names: List[str] = [r.name for r in regions]
+        rmap = {s: i for i, r in enumerate(regions) for s in r.sites}
+        self._region_of = np.array([rmap[n] for n in self.site_names],
+                                   dtype=int)
+        self._rap = [None if r.transparent else r.rap for r in regions]
+        self._hier = any(r is not None for r in self._rap)
+        nsites = len(self.site_names)
+        # one-result trunk legs per *site* (src-up / dst-down), so the
+        # hop term can index them vectorized
+        self._rap_res_up = np.zeros(nsites)
+        self._rap_res_dn = np.zeros(nsites)
+        for j in range(nsites):
+            rap = self._rap[self._region_of[j]]
+            if rap is not None:
+                self._rap_res_up[j] = (rap.rtt_s / 2
+                                       + self._link[j].result_bytes
+                                       / rap.uplink_bps)
+                self._rap_res_dn[j] = (rap.rtt_s / 2
+                                       + self._link[j].result_bytes
+                                       / rap.downlink_bps)
+        rap_u = self._rap[self._region_of[user]]
+        if rap_u is not None:
+            # DC results ride the user's region trunk down before the
+            # last-mile downlink (mirrors Fleet.downlink_time)
+            self.dl_user_s += (rap_u.rtt_s / 2
+                               + self._link[user].result_bytes
+                               / rap_u.downlink_bps)
 
         self._svc: Dict[str, Dict] = {}
         for s in self.order:
@@ -190,7 +224,8 @@ class ScreeningModel:
         util = np.zeros((N, nsites))
         dc_demand = np.zeros(N)
         ram_need = np.zeros((N, nsites))
-        up_load = np.zeros(N)
+        up_load = np.zeros((N, self.n_regions))   # per-region edge tier
+        rap_load = np.zeros((N, self.n_regions))  # per-region RAP trunk
         exec_site = np.empty((N, S), dtype=int)   # -1 = DC
         for si, s in enumerate(self.order):
             col = P[:, si]
@@ -207,9 +242,10 @@ class ScreeningModel:
                 else:
                     dc_demand[mask] += chips_for[o] * d.busy / self.horizon_s
 
-        # shared-uplink serialization load: raw records hauled off their
-        # origin site (cross-site moves and edge→DC offloads alike — the
-        # engine's FIFO pipe serializes both)
+        # shared-pipe serialization load: raw records hauled off their
+        # origin site load the origin *region's* edge tier (flat fleets:
+        # the one region = the one shared uplink, bit-identically), and
+        # region-leaving moves additionally load the origin RAP trunk
         for si, s in enumerate(self.order):
             sv = self._svc[s]
             dst = exec_site[:, si]
@@ -219,16 +255,28 @@ class ScreeningModel:
                     continue
                 osite = (np.full(N, sv["farm_site"]) if okey is None
                          else exec_site[:, self.rank[okey]])
-                for j in range(nsites):
+                for j in np.unique(osite):
+                    if j < 0:
+                        continue
                     m = (osite == j) & (dst != j)
                     if not m.any():
                         continue
                     ln = self._link[j]
+                    rj = self._region_of[j]
                     wire = total * ln.record_bytes * ln.compression
-                    up_load[m] += wire / ln.uplink_bps / self.horizon_s
+                    up_load[m, rj] += wire / ln.uplink_bps / self.horizon_s
+                    rap = self._rap[rj]
+                    if rap is not None:
+                        dstm = dst[m]
+                        crossing = ((dstm < 0) | (self._region_of[
+                            np.clip(dstm, 0, None)] != rj))
+                        rows = np.where(m)[0][crossing]
+                        rap_load[rows, rj] += (wire / rap.uplink_bps
+                                               / self.horizon_s)
 
         q_site = _q_factor(util)
         q_up = _q_factor(up_load)
+        q_rap = _q_factor(rap_load)
         dc_over = np.maximum(1.0, dc_demand / self.grid_chips)
         feasible = (ram_need <= self._ram[None, :]).all(axis=1)
 
@@ -265,6 +313,19 @@ class ScreeningModel:
                 h = np.where((us != my) & (my >= 0),
                              rtt_my / 2 + np.where(us >= 0, rtt_us / 2, 0.0),
                              0.0)
+                if self._hier:
+                    # cross-region (or DC-transiting) result handoffs
+                    # additionally ride the src RAP up and dst RAP down
+                    r_my = self._region_of[np.clip(my, 0, None)]
+                    r_us = self._region_of[np.clip(us, 0, None)]
+                    crossing = (us < 0) | (my < 0) | (r_us != r_my)
+                    extra = (np.where(crossing & (us >= 0),
+                                      self._rap_res_up[np.clip(us, 0, None)],
+                                      0.0)
+                             + np.where(crossing & (my >= 0),
+                                        self._rap_res_dn[np.clip(my, 0, None)],
+                                        0.0))
+                    h = h + np.where((us != my) & (my >= 0), extra, 0.0)
                 hop[:, si] = np.maximum(hop[:, si], h)
 
         # per-service, per-option value accumulation -------------------
@@ -282,26 +343,48 @@ class ScreeningModel:
                     continue
                 osite = (np.full(N, sv["farm_site"]) if okey is None
                          else exec_site[:, self.rank[okey]])
-                for j in range(len(self.site_names)):
+                for j in np.unique(osite):
+                    if j < 0:
+                        continue
                     m = (osite == j) & (dst != j)
                     if not m.any():
                         continue
                     ln = self._link[j]
+                    rj = self._region_of[j]
                     wire = counts * ln.record_bytes * ln.compression
                     leg = (ln.rtt_s / 2
                            + wire[None, :] / ln.uplink_bps
-                           * q_up[m, None])
+                           * q_up[m, rj][:, None])
+                    rap = self._rap[rj]
+                    if rap is not None:
+                        # region-leaving hauls ride the origin RAP trunk
+                        # (contended) on top of the edge-tier leg
+                        dstm = dst[m]
+                        crossing = ((dstm < 0) | (self._region_of[
+                            np.clip(dstm, 0, None)] != rj))
+                        if crossing.any():
+                            leg[crossing] = (leg[crossing] + rap.rtt_s / 2
+                                             + wire[None, :] / rap.uplink_bps
+                                             * q_rap[m, rj][crossing, None])
                     # onto another edge site: relay over its downlink
+                    # (cross-region: plus its region's RAP trunk down)
                     e_m = m & (dst >= 0)
                     if e_m.any():
                         dn = np.zeros((int(e_m.sum()), len(counts)))
                         sub = dst[e_m]
                         for jj in np.unique(sub):
                             lnd = self._link[jj]
-                            dn[sub == jj] = (lnd.rtt_s / 2
-                                             + counts[None, :]
-                                             * lnd.record_bytes
-                                             / lnd.downlink_bps)
+                            sel = sub == jj
+                            dn[sel] = (lnd.rtt_s / 2
+                                       + counts[None, :]
+                                       * lnd.record_bytes
+                                       / lnd.downlink_bps)
+                            rapd = self._rap[self._region_of[jj]]
+                            if rapd is not None and self._region_of[jj] != rj:
+                                dn[sel] += (rapd.rtt_s / 2
+                                            + counts[None, :]
+                                            * lnd.record_bytes
+                                            / rapd.downlink_bps)
                         haul[e_m] += leg[dst[m] >= 0] + dn
                     d_m = m & (dst < 0)
                     if d_m.any():

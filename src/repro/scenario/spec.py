@@ -47,6 +47,7 @@ from repro.pipeline.streams import Broker
 from repro.placement.edge import EdgeSpec
 from repro.placement.network import LinkSpec
 from repro.placement.plan import SITE_DC, SITE_EDGE
+from repro.region.hier import HierFleetSpec, RegionSpec
 from repro.scenario.engine import EngineConfig, ScenarioEngine
 from repro.scenario.profiles import ServiceProfile, ServiceSLO
 
@@ -185,6 +186,7 @@ class ScenarioSpec:
     farms: Tuple[FarmSpec, ...] = ()
     sites: Tuple[SiteSpec, ...] = _DEFAULT_SITES
     user_site: str = ""
+    regions: Tuple[RegionSpec, ...] = ()   # () → flat single-uplink fleet
     horizon_s: float = 600.0
     epoch_s: Optional[float] = None     # None -> one epoch (static co-sim)
     drive_step_s: Optional[float] = None
@@ -224,7 +226,7 @@ class ScenarioSpec:
             raise ValueError(f"duplicate service names: {names}")
         if not self.services:
             raise ValueError("a scenario needs at least one service")
-        FleetSpec(sites=self.sites, user_site=self.user_site)  # site checks
+        self.fleet_spec()   # site + region partition checks
         site_names = {s.name for s in self.sites}
         for site, _wins in self.outages:
             if site not in site_names:
@@ -247,6 +249,15 @@ class ScenarioSpec:
         for f in self.farms:
             if f.n_things < 1:
                 raise ValueError(f"farm {f.queue!r}: n_things < 1")
+
+    def fleet_spec(self) -> FleetSpec:
+        """The fleet topology: a :class:`HierFleetSpec` when regions
+        are declared, the classic flat :class:`FleetSpec` otherwise
+        (existing specs stay bit-identical)."""
+        if self.regions:
+            return HierFleetSpec(sites=self.sites, user_site=self.user_site,
+                                 regions=self.regions)
+        return FleetSpec(sites=self.sites, user_site=self.user_site)
 
     # ------------------------------------------------------------ assembly
     def build_pipeline(self) -> Pipeline:
@@ -280,7 +291,7 @@ class ScenarioSpec:
         if self.migration_warmup_s is not None:
             kw["migration_warmup_s"] = self.migration_warmup_s
         return EngineConfig(
-            fleet=FleetSpec(sites=self.sites, user_site=self.user_site),
+            fleet=self.fleet_spec(),
             horizon_s=self.horizon_s, epoch_s=self.epoch_s,
             drive_step_s=self.drive_step_s, heuristic=self.heuristic,
             power_cap_w=self.power_cap_w,
@@ -335,10 +346,15 @@ class ScenarioSpec:
                      link=LinkSpec(**s["link"]),
                      farm_queues=tuple(s["farm_queues"]))
             for s in d.get("sites", ()))
+        regions = tuple(
+            RegionSpec(name=r["name"], sites=tuple(r["sites"]),
+                       rap=LinkSpec(**r["rap"]))
+            for r in d.get("regions", ()))
         return cls(
             name=d["name"], services=services, farms=farms,
             sites=sites or _DEFAULT_SITES,
             user_site=d.get("user_site", ""),
+            regions=regions,
             horizon_s=d.get("horizon_s", 600.0),
             epoch_s=d.get("epoch_s"),
             drive_step_s=d.get("drive_step_s"),
@@ -374,6 +390,7 @@ class ScenarioBuilder:
         self._kw: Dict[str, Any] = {}
         self._outages: Dict[str, List[Tuple[float, float]]] = {}
         self._user_site = ""
+        self._regions: List[RegionSpec] = []
 
     # --------------------------------------------------------------- global
     def horizon(self, seconds: float) -> "ScenarioBuilder":
@@ -417,6 +434,19 @@ class ScenarioBuilder:
     def outage(self, site: str, down_s: float, up_s: float
                ) -> "ScenarioBuilder":
         self._outages.setdefault(site, []).append((down_s, up_s))
+        return self
+
+    def region(self, name: str, *sites: str,
+               rap: Optional[LinkSpec] = None) -> "ScenarioBuilder":
+        """Group ``sites`` into a region behind one RAP trunk
+        (declaring any site not yet declared). Regions must partition
+        the fleet exactly — ``build()`` validates."""
+        for s in sites:
+            if s not in self._sites:
+                self.site(s)
+        from repro.region.hier import DEFAULT_RAP
+        self._regions.append(RegionSpec(
+            name=name, sites=tuple(sites), rap=rap or DEFAULT_RAP))
         return self
 
     # ---------------------------------------------------------------- farms
@@ -495,6 +525,7 @@ class ScenarioBuilder:
             name=self._name, services=tuple(self._services),
             farms=tuple(self._farms), sites=sites,
             user_site=self._user_site,
+            regions=tuple(self._regions),
             outages=tuple((s, tuple(w)) for s, w in self._outages.items()),
             **self._kw)
         spec.validate()

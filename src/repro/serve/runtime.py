@@ -360,8 +360,8 @@ class ServeRuntime:
             network_energy_j=fleet.network_energy_j,
             dc_energy_j=dc_energy,
             bytes_up=fleet.bytes_up, bytes_down=fleet.bytes_down,
-            uplink_wait_s=fleet.uplink.queue_wait_s,
-            uplink_transfers=fleet.uplink.transfers,
+            uplink_wait_s=fleet.uplink_wait_s,
+            uplink_transfers=fleet.uplink_transfers,
             migrations=n_migs, ledger=ledger, per_site=per_site,
             per_service=per_service, epochs=epoch_meta, dc=None)
 

@@ -1,0 +1,300 @@
+"""Hierarchical regional fleets (repro.region): flat-vs-degenerate
+bit-identity, LinkQueue FIFO regression, HierFleetSpec validation, JSON
+round-trips (incl. the infinite transparent RAP), the decomposed
+region search vs flat anchors with per-region screening budgets, the
+search_placement front-door routing, and the BENCH_fleet.json schema
+golden."""
+import json
+import math
+import os
+
+import pytest
+
+from repro.online.controller import ForecastModel
+from repro.online.fleet import (ContendedUplink, FleetSpec, LinkQueue,
+                                SiteSpec, transparent_link)
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.placement.plan import SITE_DC, PlacementPlan, ServicePlacement
+from repro.placement.search import search_placement
+from repro.region import (DEFAULT_RAP, TRANSPARENT_RAP, FleetGenSpec,
+                          HierFleetSpec, RegionSpec, generate_fleet,
+                          hier_fleet_spec, partition_services,
+                          region_search, region_search_exact, regions_view)
+from repro.scenario import RateSpec, ScenarioSpec, scenario
+
+_SLO_KW = dict(soft_latency_s=2.0, hard_latency_s=10.0,
+               soft_energy_j=2.0, hard_energy_j=100.0)
+
+
+def _two_site_spec(regions: bool, rap=None) -> ScenarioSpec:
+    b = (scenario("hier-degenerate")
+         .horizon(600.0)
+         .site("gw-a", edge=EdgeSpec(name="gw-a", active_power_w=2.0),
+               link=LinkSpec(uplink_bps=40e3, downlink_bps=2e6,
+                             rtt_s=0.04), user=True)
+         .site("gw-b", edge=EdgeSpec(name="gw-b", active_power_w=2.0),
+               link=LinkSpec(uplink_bps=30e3, downlink_bps=2e6,
+                             rtt_s=0.05))
+         .farm(queue="neubotspeed", n_things=4, seed=3, site="gw-a",
+               rate=RateSpec.constant(3.0))
+         .service("agg", queue="neubotspeed", column="download_speed",
+                  agg="max", width_s=120, slide_s=30)
+         .slo(**_SLO_KW).profile(flops_per_record=2e3)
+         .service("smooth", queue="agg_out", column="value", agg="mean",
+                  width_s=120, slide_s=60)
+         .fed_by("agg")
+         .slo(**_SLO_KW).profile(flops_per_record=2e3))
+    if regions:
+        b.region("all", "gw-a", "gw-b", rap=rap or TRANSPARENT_RAP)
+    return b.build()
+
+
+_PLANS = (
+    PlacementPlan({"agg": ServicePlacement("gw-a"),
+                   "smooth": ServicePlacement("gw-a")}),
+    PlacementPlan.all_dc(["agg", "smooth"], chips=4, dvfs_f=1.0),
+    PlacementPlan({"agg": ServicePlacement("gw-b"),
+                   "smooth": ServicePlacement(SITE_DC, 4, 1.0)}),
+)
+
+
+# -------------------------------------------- flat == degenerate hier
+def test_flat_equals_transparent_one_region_bit_identical():
+    """A flat fleet IS the degenerate one-region hierarchy behind a
+    transparent RAP: every plan must score bit-identically (same VoS
+    float, same ledger totals) through the unified engine."""
+    flat = _two_site_spec(regions=False).compile()
+    hier = _two_site_spec(regions=True).compile()
+    for plan in _PLANS:
+        rf, rh = flat.run_plan(plan), hier.run_plan(plan)
+        assert rf.vos == rh.vos, plan.label          # exact, not approx
+        assert rf.ledger.totals() == rh.ledger.totals(), plan.label
+
+
+def test_opaque_rap_changes_cross_core_haul_only():
+    """A real (finite) RAP taxes DC offload but must leave a purely
+    local all-edge plan untouched."""
+    flat = _two_site_spec(regions=False).compile()
+    hier = _two_site_spec(regions=True, rap=DEFAULT_RAP).compile()
+    local = _PLANS[0]                        # everything on gw-a
+    assert flat.run_plan(local).vos == hier.run_plan(local).vos
+    offload = _PLANS[1]                      # everything in the DC
+    rf, rh = flat.run_plan(offload), hier.run_plan(offload)
+    assert rh.vos <= rf.vos                  # trunk is never free
+
+
+# ---------------------------------------------------- LinkQueue FIFO
+def test_link_queue_fifo_admission():
+    q = LinkQueue()
+    assert q.admit(0.0, 2.0) == 0.0          # idle pipe: starts at once
+    assert q.busy_until == 2.0
+    assert q.admit(1.0, 1.0) == 2.0          # queues behind the first
+    assert q.queue_wait_s == pytest.approx(1.0)
+    assert q.admit(5.0, 1.0) == 5.0          # pipe drained: no wait
+    assert q.transfers == 3
+    assert q.queue_wait_s == pytest.approx(1.0)
+
+
+def test_contended_uplink_is_link_queue():
+    """The historical flat-fleet uplink is the same FIFO primitive now
+    shared by every tier."""
+    assert issubclass(ContendedUplink, LinkQueue)
+    u = ContendedUplink()
+    assert u.admit(0.0, 1.0) == 0.0 and u.admit(0.0, 1.0) == 1.0
+
+
+def test_transparent_link_predicate():
+    assert transparent_link(TRANSPARENT_RAP)
+    assert not transparent_link(DEFAULT_RAP)
+
+
+# ------------------------------------------------ HierFleetSpec rules
+def _sites(*names):
+    return tuple(SiteSpec(name=n, edge=EdgeSpec(name=n),
+                          link=LinkSpec()) for n in names)
+
+
+def test_hier_fleet_spec_requires_exact_partition():
+    sites = _sites("a", "b", "c")
+    ok = HierFleetSpec(sites=sites, regions=(
+        RegionSpec("r0", ("a", "b"), DEFAULT_RAP),
+        RegionSpec("r1", ("c",), DEFAULT_RAP)))
+    assert ok.region_of("c") == "r1"
+    with pytest.raises(ValueError):          # "c" uncovered
+        HierFleetSpec(sites=sites, regions=(
+            RegionSpec("r0", ("a", "b"), DEFAULT_RAP),))
+    with pytest.raises(ValueError):          # "b" in two regions
+        HierFleetSpec(sites=sites, regions=(
+            RegionSpec("r0", ("a", "b"), DEFAULT_RAP),
+            RegionSpec("r1", ("b", "c"), DEFAULT_RAP)))
+    with pytest.raises(ValueError):          # unknown site
+        HierFleetSpec(sites=sites, regions=(
+            RegionSpec("r0", ("a", "b", "c", "ghost"), DEFAULT_RAP),))
+
+
+def test_regions_view_flat_and_hier():
+    flat = FleetSpec(sites=_sites("a", "b"))
+    (r,) = regions_view(flat)
+    assert r.transparent and set(r.sites) == {"a", "b"}
+    hier = HierFleetSpec(sites=_sites("a", "b"), regions=(
+        RegionSpec("r0", ("a",), DEFAULT_RAP),
+        RegionSpec("r1", ("b",), TRANSPARENT_RAP)))
+    view = regions_view(hier)
+    assert [r.name for r in view] == ["r0", "r1"]
+    assert not view[0].transparent and view[1].transparent
+
+
+# ------------------------------------------------------- JSON round-trip
+def test_hier_spec_json_roundtrip_including_infinite_rap():
+    spec = _two_site_spec(regions=True)      # transparent: inf bps trunk
+    blob = json.dumps(spec.to_dict())        # must survive JSON (inf!)
+    back = ScenarioSpec.from_dict(json.loads(blob))
+    assert back == spec
+    assert math.isinf(back.regions[0].rap.uplink_bps)
+
+
+def test_generated_spec_roundtrip_and_determinism():
+    gen = FleetGenSpec(n_sites=12, n_regions=3, seed=5, horizon_s=600.0)
+    spec = generate_fleet(gen)
+    assert generate_fleet(gen) == spec       # pure function of the spec
+    back = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    fleet = hier_fleet_spec(spec)
+    assert len(fleet.regions) == 3
+    assert sorted(s for r in fleet.regions for s in r.sites) \
+        == sorted(fleet.site_names)
+
+
+# -------------------------------------------------- decomposed search
+@pytest.fixture(scope="module")
+def small_hier():
+    spec = generate_fleet(FleetGenSpec(
+        n_sites=24, n_regions=3, seed=5, horizon_s=600.0,
+        drift="constant", base_rate_hz=4.0))
+    return spec, spec.compile()
+
+
+def test_region_search_beats_flat_anchors(small_hier):
+    spec, eng = small_hier
+    sr = region_search(eng, chips_options=(4,), seed=0, sweeps=1)
+    names = [s.name for s in spec.services]
+    r_dc = eng.run_plan(PlacementPlan.all_dc(names, chips=4, dvfs_f=1.0))
+    edge_of = {q: st.name for st in spec.sites for q in st.farm_queues}
+    r_home = eng.run_plan(PlacementPlan(
+        {s.name: ServicePlacement(edge_of[s.name[:3] + "-q"])
+         for s in spec.services}))
+    assert sr.result.feasible
+    assert sr.result.vos >= r_dc.vos - 1e-9
+    assert sr.result.vos >= r_home.vos - 1e-9
+    assert sr.method == "region-screened"
+
+
+def test_region_search_reports_per_region_budgets(small_hier):
+    _, eng = small_hier
+    sr = region_search(eng, chips_options=(4,), seed=0, sweeps=1)
+    regions = sr.screen["regions"]
+    assert len(regions) == 3
+    for name, st in regions.items():
+        assert {"services", "candidate_sites", "space", "top_k",
+                "screened", "best_screen_vos"} <= set(st), name
+        # the budget is the region's own: derived from ITS block space
+        from repro.placement.search import _default_top_k
+        assert st["top_k"] == _default_top_k(st["space"], 65536), name
+    assert sr.screen["warm_started"] is False
+    assert sr.screen["sweeps"] == 1
+
+
+def test_partition_services_exact_cover(small_hier):
+    spec, eng = small_hier
+    fleet = hier_fleet_spec(spec)
+    farm_site_of = {s.name: fleet.farm_site(s.queue)
+                    for s in spec.services}
+    parts = partition_services(fleet, spec.topology(), farm_site_of,
+                               max_sites_per_region=4)
+    covered = [s for p in parts for s in p.services]
+    assert sorted(covered) == sorted(s.name for s in spec.services)
+    region_sites = {r.name: set(r.sites) for r in fleet.regions}
+    for p in parts:
+        assert set(p.sites) <= region_sites[p.region]
+        assert len(p.sites) <= 4
+        # the farm sites the partition's chains are rooted at survive
+        # the cap
+        for svc in p.services:
+            root_site = farm_site_of[svc.replace("svc1", "svc0")
+                                     .replace("svc2", "svc0")]
+            assert root_site in p.sites
+
+
+def test_search_placement_front_door_routes_hier(small_hier):
+    spec, eng = small_hier
+    sr = search_placement(eng, chips_options=(4,), seed=0)
+    assert sr.method == "region-screened"
+    rates = {s.name: 4.0 for s in spec.services}
+    model = ForecastModel(eng.info(), rates)
+    sre = search_placement(model, chips_options=(4,), seed=0)
+    assert sre.method == "region-exact"
+    # warm start is honoured and can only help
+    sre2 = search_placement(model, chips_options=(4,), seed=0,
+                            warm_start=sre.plan)
+    assert sre2.screen["warm_started"] is True
+    assert sre2.result.vos >= sre.result.vos - 1e-9
+    # forcing the flat path still works on a hierarchical fleet
+    srf = search_placement(eng, chips_options=(4,), seed=0,
+                           partition=False,
+                           edge_sites=tuple(eng.cfg.fleet.site_names[:4]))
+    assert srf.method not in ("region-screened", "region-exact")
+
+
+def test_region_search_exact_beats_anchors(small_hier):
+    spec, eng = small_hier
+    rates = {s.name: 4.0 for s in spec.services}
+    model = ForecastModel(eng.info(), rates)
+    sr = region_search_exact(model, chips_options=(4,), seed=0)
+    names = [s.name for s in spec.services]
+    r_dc = model.run(PlacementPlan.all_dc(names, chips=4, dvfs_f=1.0))
+    assert sr.result.vos >= r_dc.vos - 1e-9
+    assert set(sr.screen["regions"]) \
+        == {r.name for r in hier_fleet_spec(spec).regions}
+
+
+# ------------------------------------------------- BENCH_fleet golden
+_BENCH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
+
+
+@pytest.mark.skipif(not os.path.exists(_BENCH),
+                    reason="no recorded BENCH_fleet.json")
+def test_bench_fleet_report_schema_golden():
+    """Schema golden for BENCH_fleet.json: the recorded planet-scale run
+    must stay at >= 500 sites / >= 3 regions, keep its per-region
+    screening budgets, and have passed every acceptance gate."""
+    with open(_BENCH) as f:
+        rep = json.load(f)
+    assert {"smoke", "generated", "search", "online", "determinism",
+            "acceptance", "wall_s", "wall_gate_s"} <= set(rep)
+    assert rep["smoke"] is False
+    g = rep["generated"]
+    assert g["sites"] >= 500 and g["regions"] >= 3
+    assert {"n_sites", "n_regions", "seed", "drift",
+            "spec_sha256"} <= set(g)
+    s = rep["search"]
+    assert {"vos", "all_dc_vos", "home_edge_vos", "stats",
+            "wall_s"} <= set(s)
+    assert s["vos"] >= s["all_dc_vos"] and s["vos"] >= s["home_edge_vos"]
+    budgets = s["stats"]["screen"]["regions"]
+    assert len(budgets) >= 3
+    for name, st in budgets.items():
+        assert {"services", "candidate_sites", "space", "top_k",
+                "screened"} <= set(st), name
+    o = rep["online"]
+    assert {"vos", "statics", "best_static", "search_methods",
+            "epochs"} <= set(o)
+    assert o["vos"] > o["best_static"]["vos"]
+    assert o["search_methods"] == ["region-exact"]
+    acc = rep["acceptance"]
+    assert {"search_beats_flat_baselines", "online_beats_best_static",
+            "warm_started_region_search", "ledger_conserved",
+            "generator_deterministic", "wall_within_gate",
+            "pass"} <= set(acc)
+    assert acc["pass"] is True
+    assert rep["wall_s"] <= rep["wall_gate_s"]

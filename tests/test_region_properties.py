@@ -1,0 +1,150 @@
+"""Property suite for the hierarchical fleet layer.
+
+Three invariants, each pinned two ways — a deterministic parametrized
+pass that always runs, and a randomized hypothesis pass when the
+optional dependency is installed (same skip idiom as
+``test_screen_properties.py``):
+
+  * partition exactness — the generator's regions cover every site
+    exactly once, and each region's farm queue is pinned inside it;
+  * record-flow conservation — RAP trunks and per-region edge pipes
+    redistribute *time* (contention, delay), never *records*: the
+    source-side ledger keys (produced / fetched / overflow / unread)
+    are identical between a hierarchical fleet and its region-stripped
+    flat twin on the same plan, and every fetched record in each run is
+    accounted for by exactly one sink key;
+  * seeded determinism — ``generate_fleet`` is a pure function of its
+    :class:`FleetGenSpec`.
+"""
+import dataclasses
+
+import pytest
+
+from repro.placement.plan import PlacementPlan
+from repro.region import FleetGenSpec, generate_fleet, hier_fleet_spec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without the optional test dep
+    HAVE_HYPOTHESIS = False
+
+# the cross-fleet-topology-invariant ledger keys: produced at the farms
+# and fetched/overflowed/left-unread at the edge, all upstream of any
+# transport tier
+_SOURCE_KEYS = ("produced", "fetched", "overflow", "unread")
+# every fetched record must land in exactly one of these
+_SINK_KEYS = ("processed_edge", "processed_dc", "dropped_dc",
+              "inflight_dc", "buffered", "evicted_stored", "evicted_lost")
+
+
+def _check_partition(gen: FleetGenSpec) -> None:
+    spec = generate_fleet(gen)
+    fleet = hier_fleet_spec(spec)
+    seen = [s for r in fleet.regions for s in r.sites]
+    assert len(seen) == len(set(seen)) == len(fleet.site_names)
+    assert set(seen) == set(fleet.site_names)
+    region_names = {r.name for r in fleet.regions}
+    for name in fleet.site_names:            # region_of is total + unique
+        assert fleet.region_of(name) in region_names
+    # every farm queue is pinned inside the region whose chain reads it
+    for farm in spec.farms:
+        site = fleet.farm_site(farm.queue)
+        assert fleet.region_of(site) == f"region-{farm.queue[1:3]}"
+
+
+def _check_flow_conservation(gen: FleetGenSpec, chips: int) -> None:
+    """The hierarchy moves contention around (per-region edge pipes +
+    RAP trunks vs one shared uplink) so *timing*-derived keys like
+    ``dropped_dc`` may legitimately differ from the flat twin — but the
+    source-side counts cannot, and each run must account for every
+    fetched record."""
+    spec = generate_fleet(gen)
+    names = [s.name for s in spec.services]
+    plan = PlacementPlan.all_dc(names, chips=chips, dvfs_f=1.0)
+
+    hier = spec.compile().run_plan(plan)
+    flat = dataclasses.replace(spec, regions=()).compile().run_plan(plan)
+    ht, ft = hier.ledger.totals(), flat.ledger.totals()
+
+    assert hier.ledger.conserved() and flat.ledger.conserved()
+    for key in _SOURCE_KEYS:
+        assert ht.get(key, 0) == ft.get(key, 0), key
+    for totals in (ht, ft):
+        assert totals["fetched"] == sum(totals.get(k, 0)
+                                        for k in _SINK_KEYS)
+
+
+def _check_determinism(gen: FleetGenSpec) -> None:
+    a, b = generate_fleet(gen), generate_fleet(gen)
+    assert a == b and a.to_dict() == b.to_dict()
+
+
+# ---------------------------------------------------------------------
+# deterministic pins — always run, hypothesis or not
+# ---------------------------------------------------------------------
+_PIN_GENS = [
+    FleetGenSpec(n_sites=3, n_regions=1, services_per_region=1, seed=0,
+                 drift="constant", horizon_s=600.0),
+    FleetGenSpec(n_sites=8, n_regions=3, seed=42, drift="constant",
+                 horizon_s=600.0),
+    FleetGenSpec(n_sites=17, n_regions=4, services_per_region=2, seed=7,
+                 drift="bursts", horizon_s=600.0, base_rate_hz=3.0),
+]
+
+
+@pytest.mark.parametrize("gen", _PIN_GENS,
+                         ids=lambda g: f"{g.n_sites}x{g.n_regions}-s{g.seed}")
+def test_partition_exactness_pins(gen):
+    _check_partition(gen)
+
+
+@pytest.mark.parametrize("gen,chips", [(_PIN_GENS[1], 4), (_PIN_GENS[2], 8)],
+                         ids=["8x3-s42-c4", "17x4-s7-c8"])
+def test_flow_conservation_pins(gen, chips):
+    _check_flow_conservation(gen, chips)
+
+
+@pytest.mark.parametrize("gen", _PIN_GENS,
+                         ids=lambda g: f"{g.n_sites}x{g.n_regions}-s{g.seed}")
+def test_generator_determinism_pins(gen):
+    _check_determinism(gen)
+
+
+# ---------------------------------------------------------------------
+# randomized sweeps — hypothesis, when installed
+# ---------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _GEN = st.builds(
+        FleetGenSpec,
+        n_sites=st.integers(min_value=3, max_value=24),
+        n_regions=st.integers(min_value=1, max_value=3),
+        services_per_region=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+        drift=st.sampled_from(("constant", "diurnal", "bursts")),
+        horizon_s=st.just(600.0),
+        base_rate_hz=st.floats(min_value=1.0, max_value=6.0),
+    ).filter(lambda g: g.n_sites >= g.n_regions)
+
+    @settings(max_examples=25, deadline=None)
+    @given(gen=_GEN)
+    def test_generator_regions_partition_sites_exactly(gen):
+        _check_partition(gen)
+
+    @settings(max_examples=20, deadline=None)
+    @given(gen=_GEN)
+    def test_generator_is_deterministic(gen):
+        _check_determinism(gen)
+
+    @settings(max_examples=6, deadline=None)
+    @given(gen=st.builds(
+        FleetGenSpec,
+        n_sites=st.integers(min_value=4, max_value=10),
+        n_regions=st.integers(min_value=2, max_value=3),
+        seed=st.integers(min_value=0, max_value=255),
+        drift=st.just("constant"),
+        horizon_s=st.just(600.0),
+    ).filter(lambda g: g.n_sites >= g.n_regions),
+        chips=st.sampled_from((4, 8)))
+    def test_trunks_conserve_record_flow(gen, chips):
+        _check_flow_conservation(gen, chips)
