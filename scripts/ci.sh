@@ -40,7 +40,7 @@ if [[ "${CI_SKIP_COVERAGE:-0}" != "1" ]]; then
             tests/test_scenario.py tests/test_online.py \
             tests/test_feedback.py tests/test_placement.py \
             tests/test_elastic.py tests/test_screen_properties.py \
-            tests/test_ledger_properties.py \
+            tests/test_ledger_properties.py tests/test_parallel.py \
             --cov=repro.scenario --cov=repro.online \
             --cov-report=term --cov-fail-under="${CI_COV_FLOOR:-85}"
     else
@@ -66,10 +66,12 @@ if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     # strictly improves worst-quantile VoS with DES tail confirmation
     # (robust-planning gate),
     # and bench_fleet --smoke, which *asserts* the 500-site hierarchical
-    # fleet is generated, searched (decomposed per-region screening +
-    # exact-DES finalists) and co-simulated under the wall-clock gate,
-    # with the decomposed search beating both flat anchors and the
-    # warm-started online controller beating the best static plan
-    # (planet-scale fleet gate)
+    # fleet is generated, searched (delta-aware per-region screening +
+    # batched exact-DES finalists) and co-simulated under the wall-clock
+    # gate, with the decomposed search beating both flat anchors, the
+    # warm-started online controller beating the best static plan, the
+    # search phase holding >= 3x its recorded pre-optimization wall, and
+    # a 2-worker ParallelEvaluator re-search reproducing the serial
+    # winner bit-identically (planet-scale fleet + parallel gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

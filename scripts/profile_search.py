@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Profile one decomposed region_search call on the benchmark fleet.
+
+Separates the placement-independent functional drive (prewarmed, timed
+apart) from the search itself, then prints the cProfile top-N of the
+search by cumulative time — the first place to look when the planning
+hot path regresses. Options:
+
+  --sites N / --regions N / --seed N   fleet shape (default 100x4, a
+                                       faster stand-in for the 500x8
+                                       benchmark scenario; pass
+                                       --sites 500 --regions 8 to
+                                       profile the bench itself)
+  --sweeps N                           block-coordinate sweeps (default 1)
+  --top N                              rows to print (default 25)
+  --sort cumulative|tottime            cProfile sort key
+  --workers N                          profile through a ParallelEvaluator
+                                       pool instead of the serial
+                                       evaluator (worker CPU time is NOT
+                                       attributed by cProfile — use this
+                                       to see the dispatch overhead, not
+                                       the kernels)
+
+Usage: PYTHONPATH=src python scripts/profile_search.py [--top 25]
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+import time
+
+from repro.region import FleetGenSpec, generate_fleet, region_search
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sites", type=int, default=100)
+    ap.add_argument("--regions", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--sweeps", type=int, default=1)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--sort", default="cumulative",
+                    choices=("cumulative", "tottime"))
+    ap.add_argument("--workers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    gen = FleetGenSpec(n_sites=args.sites, n_regions=args.regions,
+                       seed=args.seed, epoch_s=300.0, drift="bursts")
+    t0 = time.perf_counter()
+    spec = generate_fleet(gen)
+    eng = spec.compile()
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eng.screening_model()          # functional drive + screen lowering
+    t_drive = time.perf_counter() - t0
+    print(f"fleet {args.sites}x{args.regions}: compile {t_compile:.2f}s, "
+          f"drive+screen prewarm {t_drive:.2f}s (excluded from profile)")
+
+    evaluator = None
+    if args.workers > 1:
+        from repro.placement.parallel import ParallelEvaluator
+        evaluator = ParallelEvaluator(eng, workers=args.workers, spec=spec)
+
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    sr = region_search(eng, chips_options=(4, 8), seed=0,
+                       sweeps=args.sweeps, evaluator=evaluator)
+    prof.disable()
+    wall = time.perf_counter() - t0
+    if evaluator is not None:
+        evaluator.close()
+
+    delta = sr.screen.get("delta") or {}
+    print(f"search wall {wall:.2f}s: vos={sr.result.vos:.1f} "
+          f"screened={sr.screen['screened']} exact-evals={sr.evaluations} "
+          f"delta-calls={delta.get('delta_calls')} "
+          f"dense-fallbacks={delta.get('dense_fallbacks')}")
+    stats = pstats.Stats(prof, stream=sys.stdout)
+    stats.sort_stats(args.sort).print_stats(args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -131,9 +131,17 @@ class ScenarioEnsemble:
                   include_nominal: bool = True) -> "ScenarioEnsemble":
         """Build the ensemble: compile (or reuse) the base engine, lower
         it to a fluid engine, sample ``n`` perturbed realizations and
-        precompute their modulation / outage arrays."""
-        fluid = FluidEngine.compile(engine if engine is not None else spec,
-                                    dt_s=dt_s)
+        precompute their modulation / outage arrays. When ``engine`` is
+        a :class:`~repro.scenario.engine.ScenarioEngine` the lowering
+        goes through its cached :meth:`fluid_engine` accessor, so
+        repeated ensembles on one engine (an epoch loop) share arrays
+        and jit cache."""
+        make = getattr(engine, "fluid_engine", None)
+        if make is not None:
+            fluid = make(dt_s=dt_s)
+        else:
+            fluid = FluidEngine.compile(
+                engine if engine is not None else spec, dt_s=dt_s)
         perturbed = sample_specs(spec, n, seed=seed, rate_scale=rate_scale,
                                  onset_scale=onset_scale)
         specs = ([spec] + perturbed) if include_nominal else perturbed

@@ -25,7 +25,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.core.value import task_value
 from repro.placement.edge import EdgeNode
 from repro.placement.plan import SITE_DC, PlacementPlan
-from repro.placement.search import search_placement
+from repro.placement.search import Evaluator, search_placement
 from repro.region.hier import regions_view
 from repro.scenario.observe import BridgeInfo, EpochObservation
 from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
@@ -432,6 +432,17 @@ class OnlineController:
         self.current = None
         self._pred: Dict[int, Dict[str, Dict]] = {}
         self._observed_upto = 0
+        # cross-epoch exact-score memo: one dict for the whole run,
+        # namespaced per epoch by the forecast model's fingerprint (the
+        # model changes whenever the rate estimate / outage set /
+        # corrections move — a plan-only key would serve stale scores).
+        # Steady epochs re-derive the same fingerprint and the search's
+        # warm-start / anchor / finalist evaluations hit instead of
+        # re-scoring.
+        self._xcache: Dict = {}
+        self._cum_hits = 0
+        self._cum_misses = 0
+        self._fp_seen: set = set()
         if self.calibrate:
             if self.calibration is None:
                 self.calibration = CalibrationLoop(list(info.topology))
@@ -455,6 +466,25 @@ class OnlineController:
 
     def _down(self, obs: EpochObservation) -> Dict[str, bool]:
         return obs.down_now
+
+    def _model_fingerprint(self, rates: Mapping[str, float],
+                           down: Mapping[str, bool],
+                           corr) -> Tuple:
+        """Hashable identity of this epoch's forecast model — the cache
+        namespace for cross-epoch score reuse. Built from the *exact*
+        parameter values (not the telemetry's rounded ``to_dict`` forms,
+        which could alias two different models onto one namespace and
+        serve a stale score)."""
+        corr_fp: Tuple = ()
+        if corr:
+            corr_fp = tuple(sorted(
+                (s, dataclasses.astuple(c) if dataclasses.is_dataclass(c)
+                 else tuple(sorted(c.to_dict().items())))
+                for s, c in corr.items()))
+        return (tuple(sorted(rates.items())),
+                # ForecastModel only reads truthiness of down entries
+                tuple(sorted(k for k, v in down.items() if v)),
+                corr_fp)
 
     # ---------------------------------------------------------- calibration
     def _absorb_residuals(self, obs: EpochObservation) -> None:
@@ -561,9 +591,18 @@ class OnlineController:
         # per-region search; the incumbent plan warm-starts it so steady
         # epochs cost a handful of model calls (ignored on flat fleets —
         # the joint search stays bit-identical)
+        fp = self._model_fingerprint(rates, down, corr)
+        model_reused = fp in self._fp_seen
+        self._fp_seen.add(fp)
+        if len(self._xcache) > 200_000:   # bound the run-long memo
+            self._xcache.clear()
+            self._fp_seen = {fp}
+        ev = Evaluator(model, cache=self._xcache, key_prefix=fp)
         sr = search_placement(model, self.chips_options, self.dvfs_options,
                               seed=self.seed, edge_sites=edge_sites,
-                              warm_start=self.current)
+                              warm_start=self.current, evaluator=ev)
+        self._cum_hits += sr.cache_hits
+        self._cum_misses += sr.cache_misses
         best = sr.plan
         risk_entry = None
         if self.risk is not None:
@@ -595,7 +634,14 @@ class OnlineController:
             "switched": switched,
             "search": {"method": sr.method, "evaluations": sr.evaluations,
                        "cache_hits": sr.cache_hits,
-                       "cache_misses": sr.cache_misses},
+                       "cache_misses": sr.cache_misses,
+                       # cross-epoch reuse: cumulative over the run's
+                       # shared memo plus whether this epoch's model
+                       # fingerprint repeated an earlier epoch's
+                       "cum_cache_hits": self._cum_hits,
+                       "cum_cache_misses": self._cum_misses,
+                       "cache_plans": len(self._xcache),
+                       "model_reused": model_reused},
         }
         if risk_entry is not None:
             entry["risk"] = risk_entry

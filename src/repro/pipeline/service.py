@@ -39,25 +39,32 @@ class StreamService:
         self.sinks: List[Callable[[Dict], None]] = []
         self._next_fire = cfg.window.slide_s
         self.buffer_evictions = 0
+        # observers (e.g. the conservation taps) see each eviction batch
+        # without re-scanning the buffer; None when nobody listens
+        self._spill_hook: Optional[Callable[[List[Record]], None]] = None
 
     # ---- Fetch: unlimited consumption of notified records ----------------
     def fetch(self) -> int:
         recs = self.q.fetch(self.cfg.name)
-        self.buffer.extend(recs)
+        buf = self.buffer
+        buf.extend(recs)
         # data-management strategy: records older than the window spill to
         # the store (if attached) instead of being lost (paper §3)
-        horizon = (self.buffer[-1].ts - self.cfg.window.width_s
-                   if self.buffer else 0.0)
-        keep, spill = [], []
-        for r in self.buffer:
-            (keep if r.ts >= horizon else spill).append(r)
+        horizon = buf[-1].ts - self.cfg.window.width_s if buf else 0.0
+        keep = [r for r in buf if r.ts >= horizon]
+        spill = ([r for r in buf if r.ts < horizon]
+                 if len(keep) != len(buf) else [])
         if len(keep) > self.cfg.buffer_budget:
             spill.extend(keep[:-self.cfg.buffer_budget])
             keep = keep[-self.cfg.buffer_budget:]
-        for r in spill:
-            self.buffer_evictions += 1
-            if self.cfg.store is not None:
-                self.cfg.store.append(r)
+        if spill:
+            self.buffer_evictions += len(spill)
+            store = self.cfg.store
+            if store is not None:
+                for r in spill:
+                    store.append(r)
+            if self._spill_hook is not None:
+                self._spill_hook(spill)
         self.buffer = keep
         return len(recs)
 

@@ -28,11 +28,12 @@ _COSIM_NAMES = ("CoSimConfig", "CoSimResult", "CoSimulator",
 _SEARCH_NAMES = ("Evaluator", "SearchResult", "exhaustive_search",
                  "greedy_search", "robust_search", "screened_search",
                  "search_placement")
+_PARALLEL_NAMES = ("ParallelEvaluator", "default_workers")
 
 __all__ = ["EdgeNode", "EdgeSpec", "FireExec", "LinkSpec", "NetworkModel",
            "PlacementPlan", "ServicePlacement", "SITE_DC", "SITE_EDGE",
            "enumerate_plans", "service_options",
-           *_COSIM_NAMES, *_SEARCH_NAMES]
+           *_COSIM_NAMES, *_SEARCH_NAMES, *_PARALLEL_NAMES]
 
 
 def __getattr__(name):
@@ -42,6 +43,9 @@ def __getattr__(name):
     if name in _SEARCH_NAMES:
         from repro.placement import search
         return getattr(search, name)
+    if name in _PARALLEL_NAMES:
+        from repro.placement import parallel
+        return getattr(parallel, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -40,9 +40,65 @@ class ServicePlacement:
         return f"dc[{self.chips}]@{self.dvfs_f:g}"
 
 
+class _Assignments(dict):
+    """Plan assignment map that can be sealed: once the owning plan's
+    canonical ``key()`` is computed (and possibly memoized on), any
+    further mutation raises — a stale memo entry would silently score
+    the wrong plan."""
+    __slots__ = ("_sealed",)
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._sealed = False
+
+    def _reject(self):
+        raise TypeError("PlacementPlan is frozen once key() has been "
+                        "computed; build a new plan with with_placement()")
+
+    def __setitem__(self, k, v):
+        if self._sealed:
+            self._reject()
+        super().__setitem__(k, v)
+
+    def __delitem__(self, k):
+        if self._sealed:
+            self._reject()
+        super().__delitem__(k)
+
+    def _guarded(name):  # noqa: N805 — tiny local factory
+        orig = getattr(dict, name)
+
+        def meth(self, *a, **kw):
+            if self._sealed:
+                self._reject()
+            return orig(self, *a, **kw)
+        meth.__name__ = name
+        return meth
+
+    update = _guarded("update")
+    pop = _guarded("pop")
+    popitem = _guarded("popitem")
+    clear = _guarded("clear")
+    setdefault = _guarded("setdefault")
+    del _guarded
+
+    def __reduce__(self):
+        return (_rebuild_assignments, (dict(self), self._sealed))
+
+
+def _rebuild_assignments(d, sealed):
+    out = _Assignments(d)
+    out._sealed = sealed
+    return out
+
+
 @dataclasses.dataclass
 class PlacementPlan:
     assignments: Dict[str, ServicePlacement]
+
+    def __post_init__(self):
+        self.assignments = _Assignments(self.assignments)
+        self._key: Optional[Tuple] = None
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -83,10 +139,19 @@ class PlacementPlan:
         return out
 
     def key(self) -> Tuple:
-        """Canonical hashable identity (for memoized search)."""
-        return tuple(sorted((n, p.site, p.chips if not p.is_edge else 0,
-                             p.dvfs_f if not p.is_edge else 0.0)
-                            for n, p in self.assignments.items()))
+        """Canonical hashable identity (for memoized search). Cached on
+        first computation — search layers call this per memo/dedup
+        lookup, and re-sorting the full assignment tuple every time
+        dominated large-fleet dedup passes. Computing the key seals the
+        plan against further assignment mutation."""
+        k = self._key
+        if k is None:
+            k = tuple(sorted((n, p.site, p.chips if not p.is_edge else 0,
+                              p.dvfs_f if not p.is_edge else 0.0)
+                             for n, p in self.assignments.items()))
+            self._key = k
+            self.assignments._sealed = True
+        return k
 
     @property
     def label(self) -> str:

@@ -69,20 +69,35 @@ class Evaluator:
     Counters: ``hits`` / ``misses`` split cached from fresh exact runs
     (``evaluations`` alone used to conflate them); ``screened`` counts
     plans scored by the tier-1 vectorized screen (never co-simulated
-    unless they survive into the top-K)."""
+    unless they survive into the top-K).
 
-    def __init__(self, cosim: CoSimulator, screener=None):
+    ``cache`` lets callers share one memo dict across evaluators (the
+    online controller keeps a single cross-epoch cache); ``key_prefix``
+    namespaces its entries by scorer identity — a ``ForecastModel``
+    changes with every epoch's rate estimate, so a shared cache keyed
+    on the plan alone would serve stale scores from a different
+    model."""
+
+    def __init__(self, cosim: CoSimulator, screener=None,
+                 cache: Optional[Dict[Tuple, CoSimResult]] = None,
+                 key_prefix: Optional[Tuple] = None):
         self.cosim = cosim
         self._run = getattr(cosim, "run_plan", None) or cosim.run
-        self.cache: Dict[Tuple, CoSimResult] = {}
+        self.cache: Dict[Tuple, CoSimResult] = (cache if cache is not None
+                                                else {})
+        self._prefix = key_prefix
         self.history: List[Tuple[str, float]] = []
         self.hits = 0
         self.misses = 0
         self.screened = 0
         self._screener = screener
 
+    def _key(self, plan: PlacementPlan) -> Tuple:
+        k = plan.key()
+        return (self._prefix, k) if self._prefix is not None else k
+
     def __call__(self, plan: PlacementPlan) -> CoSimResult:
-        key = plan.key()
+        key = self._key(plan)
         if key not in self.cache:
             self.misses += 1
             res = self._run(plan)
@@ -91,6 +106,15 @@ class Evaluator:
         else:
             self.hits += 1
         return self.cache[key]
+
+    def evaluate_batch(self, plans: Sequence[PlacementPlan]
+                       ) -> List[CoSimResult]:
+        """Evaluate many plans; results in submission order. The base
+        evaluator runs them serially — :class:`~repro.placement.
+        parallel.ParallelEvaluator` overrides this to fan uncached
+        plans across a process pool while keeping cache, history and
+        counters bit-identical to this loop."""
+        return [self(p) for p in plans]
 
     @property
     def screener(self):
@@ -118,6 +142,23 @@ class Evaluator:
                              "screening model")
         self.screened += len(P)
         return s.score_matrix(P, options)
+
+    def screen_block(self, P: np.ndarray, cols: Sequence[int],
+                     options) -> np.ndarray:
+        """Delta-aware twin of :meth:`screen_matrix` for block-
+        coordinate batches where only ``cols`` vary across rows (the
+        decomposed region search). Bit-identical scores; falls back to
+        the dense pass on screeners without ``score_block`` or when the
+        block does not decompose cleanly."""
+        s = self.screener
+        if s is None:
+            raise ValueError(f"{type(self.cosim).__name__} has no "
+                             "screening model")
+        self.screened += len(P)
+        block = getattr(s, "score_block", None)
+        if block is None:
+            return s.score_matrix(P, options)
+        return block(P, cols, options)
 
     def stats(self) -> Dict:
         return {"evaluations": self.evaluations, "cache_hits": self.hits,
@@ -389,11 +430,12 @@ def _screened_search(cosim, ev: Evaluator, screener,
         sample_budget, climbers, climb_rounds)
     screen_best_key = survivors[0].key() if survivors else None
 
-    # tier 2: exact DES on survivors + anchors (memoized)
+    # tier 2: exact DES on survivors + anchors (memoized; a parallel
+    # evaluator fans the uncached ones out, merge order is fixed)
     best_plan: Optional[PlacementPlan] = None
     best: Optional[CoSimResult] = None
-    for plan in survivors + anchors:
-        res = ev(plan)
+    for plan, res in zip(survivors + anchors,
+                         ev.evaluate_batch(survivors + anchors)):
         if best is None or _score(res) > _score(best):
             best_plan, best = plan, res
     assert best_plan is not None and best is not None
@@ -489,9 +531,10 @@ def robust_search(cosim: CoSimulator, ensemble, risk="cvar",
 
     # tier 3: exact DES on finalists + anchors; winner = best-risk
     # finalist the DES confirms feasible
-    exact: Dict[Tuple, CoSimResult] = {}
-    for plan in finalists + list(anchors):
-        exact[plan.key()] = ev(plan)
+    pool_plans = finalists + list(anchors)
+    exact: Dict[Tuple, CoSimResult] = {
+        plan.key(): res
+        for plan, res in zip(pool_plans, ev.evaluate_batch(pool_plans))}
     best_plan: Optional[PlacementPlan] = None
     for plan in finalists:
         if exact[plan.key()].feasible:

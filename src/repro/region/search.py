@@ -241,7 +241,10 @@ def region_search(cosim,
                 sub_arr = np.asarray(sub)
                 P = np.tile(cur, (len(B), 1))
                 P[:, cols] = sub_arr[B]
-                scores = ev.screen_matrix(P, options)
+                # delta-aware: only this region's columns vary, so the
+                # pinned complement is scored once (bit-identical to the
+                # dense screen_matrix; see ScreeningModel.score_block)
+                scores = ev.screen_block(P, cols, options)
                 screened += len(P)
                 best_rows = np.argsort(-scores, kind="stable")
                 cur = P[best_rows[0]].copy()
@@ -296,8 +299,8 @@ def region_search(cosim,
     if ensemble is not None:
         from repro.fluid.robust import RiskSpec, risk_score
         rs = RiskSpec.of(risk if risk is not None else "mean")
-        cands = finalists + [a for a in anchors
-                             if a.key() not in {p.key() for p in finalists}]
+        fin_keys = {p.key() for p in finalists}
+        cands = finalists + [a for a in anchors if a.key() not in fin_keys]
         t1 = time.perf_counter()
         fr = ensemble.evaluate(cands, corrections=corrections)
         fluid_wall = time.perf_counter() - t1
@@ -309,11 +312,12 @@ def region_search(cosim,
                         "candidates": len(cands),
                         "fluid_wall_s": round(fluid_wall, 4)}
 
-    # exact tier: DES on finalists + anchors (memoized)
+    # exact tier: DES on finalists + anchors (memoized; a parallel
+    # evaluator fans the uncached ones out, merge order is fixed)
     best_plan: Optional[PlacementPlan] = None
     best = None
-    for plan in finalists + anchors:
-        res = ev(plan)
+    for plan, res in zip(finalists + anchors,
+                         ev.evaluate_batch(finalists + anchors)):
         if best is None or _score(res) > _score(best):
             best_plan, best = plan, res
     assert best_plan is not None and best is not None
@@ -331,6 +335,9 @@ def region_search(cosim,
         "agreement": bool(finalists
                           and finalists[0].key() == best_plan.key()),
     }
+    delta = getattr(screener, "delta_stats", None)
+    if delta is not None:
+        screen_stats["delta"] = delta()
     if robust_stats is not None:
         screen_stats["robust"] = robust_stats
     method = ("region-screened" if ensemble is None
@@ -401,8 +408,7 @@ def region_search_exact(model,
     anchors.append(_home_edge_plan(partitions, model.topology,
                                    farm_site_of))
     best_plan, best = current, ev(current)
-    for plan in anchors:
-        res = ev(plan)
+    for plan, res in zip(anchors, ev.evaluate_batch(anchors)):
         if _score(res) > _score(best):
             best_plan, best = plan, res
     region_stats = {part.region: {"services": len(part.services),

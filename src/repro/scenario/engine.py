@@ -360,6 +360,7 @@ class ScenarioEngine:
         self._true_rates: Optional[List[Dict[str, float]]] = None
         self._ledger_static: Optional[Dict[str, Dict]] = None
         self._screen = None
+        self._fluid: Dict = {}
 
     @property
     def all_sites(self) -> Tuple[str, ...]:
@@ -405,6 +406,19 @@ class ScenarioEngine:
             from repro.scenario.screen import ScreeningModel
             self._screen = ScreeningModel(self)
         return self._screen
+
+    def fluid_engine(self, dt_s=None):
+        """Cached fluid lowering of this engine (one per ``dt_s``) —
+        see :class:`repro.fluid.engine.FluidEngine`. Drift ensembles
+        (:class:`repro.fluid.ensemble.ScenarioEnsemble`) built on this
+        engine route through here, so an epoch loop that re-ranks
+        finalists every epoch reuses the lowered trace arrays and the
+        jit cache instead of re-lowering per ensemble."""
+        fl = self._fluid.get(dt_s)
+        if fl is None:
+            from repro.fluid.engine import FluidEngine
+            fl = self._fluid[dt_s] = FluidEngine.compile(self, dt_s=dt_s)
+        return fl
 
     def info(self) -> BridgeInfo:
         return BridgeInfo(topology=self.topology, profiles=self.profiles,

@@ -98,7 +98,9 @@ class _PublisherContext:
 
 class _QueueTap:
     """Instruments one broker queue: identity and origin of every
-    published, dropped and per-consumer fetched record."""
+    published, dropped and per-consumer fetched record. Consumers (the
+    service taps) may register a per-consumer listener to observe each
+    fetched batch incrementally instead of re-scanning buffers."""
 
     def __init__(self, q, ctx: _PublisherContext):
         self.q = q
@@ -106,24 +108,39 @@ class _QueueTap:
         self.drop_refs: List[object] = []
         self.origin: Dict[int, Optional[str]] = {}
         self.fetched: Dict[str, Dict[int, object]] = {}
+        self.listeners: Dict[str, object] = {}
         orig_pub, orig_fetch = q.publish, q.fetch
+        pub_append = self.pub_refs.append
+        origin = self.origin
+        buf = q.buf    # the deque is mutated in place, never reassigned
 
         def publish(rec):
             # detect overflow from the queue's own counter (drop-oldest:
-            # the victim is the head snapshotted before the publish)
-            oldest = q.buf[0] if q.buf else None
-            before = q.dropped
-            orig_pub(rec)
-            if q.dropped > before:
-                self.drop_refs.append(oldest)
-            self.pub_refs.append(rec)
-            self.origin[id(rec)] = ctx.current
+            # the victim is the head snapshotted before the publish);
+            # below capacity no drop is possible, skip the snapshots
+            if len(buf) >= q.capacity:
+                oldest = buf[0] if buf else None
+                before = q.dropped
+                orig_pub(rec)
+                if q.dropped > before:
+                    self.drop_refs.append(oldest)
+            else:
+                orig_pub(rec)
+            pub_append(rec)
+            origin[id(rec)] = ctx.current
 
         def fetch(consumer, max_n=1 << 30):
             recs = orig_fetch(consumer, max_n)
-            got = self.fetched.setdefault(consumer, {})
-            for r in recs:
-                got[id(r)] = r
+            if recs:
+                got = self.fetched.get(consumer)
+                if got is None:
+                    got = self.fetched[consumer] = {}
+                got.update(zip(map(id, recs), recs))
+                lis = self.listeners.get(consumer)
+                if lis is not None:
+                    lis(recs)
+            else:
+                self.fetched.setdefault(consumer, {})
             return recs
 
         q.publish, q.fetch = publish, fetch
@@ -142,22 +159,47 @@ class FireRec:
 class _ServiceTap:
     """Wraps StreamService.fire to log fires, first-coverage counts and
     per-origin attribution; marks the service as publisher while its
-    sinks run."""
+    sinks run.
+
+    Coverage tracking is incremental: the queue tap's fetch listener
+    feeds each newly fetched batch into an insertion-ordered uncovered
+    map and the service's spill hook retires evictions, so a fire scans
+    only the handful of records still awaiting coverage instead of the
+    whole operator buffer (which is mostly already-covered window
+    history). The counts and the per-origin attribution are identical
+    to the original full-buffer scan: the uncovered map preserves
+    buffer order, so records are covered in the same order."""
 
     def __init__(self, svc, qtap: _QueueTap, ctx: _PublisherContext):
         self.svc = svc
         self.fires: List[FireRec] = []
         self.covered: Dict[int, object] = {}
+        self._uncovered: Dict[int, object] = {}
         orig_fire = svc.fire
+        origin_get = qtap.origin.get
+        unc = self._uncovered
+        covered = self.covered
+
+        def on_fetched(recs):
+            unc.update(zip(map(id, recs), recs))
+
+        qtap.listeners[svc.cfg.name] = on_fetched
+
+        def on_spill(spill):
+            for r in spill:
+                unc.pop(id(r), None)
+
+        svc._spill_hook = on_spill
 
         def fire(now):
             n_new = 0
             origins: Dict[Optional[str], int] = {}
-            for r in svc.buffer:
-                if id(r) not in self.covered and r.ts < now:
-                    self.covered[id(r)] = r
-                    n_new += 1
-                    o = qtap.origin.get(id(r))
+            if unc:
+                newly = [rid for rid, r in unc.items() if r.ts < now]
+                n_new = len(newly)
+                for rid in newly:
+                    covered[rid] = unc.pop(rid)
+                    o = origin_get(rid)
                     origins[o] = origins.get(o, 0) + 1
             prev = ctx.current
             ctx.current = svc.cfg.name
