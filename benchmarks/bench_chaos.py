@@ -1,0 +1,384 @@
+"""Chaos & migration benchmark: unplanned mid-epoch faults vs the
+chaos-aware controller → BENCH_chaos.json.
+
+Unlike ``bench_online``'s scheduled outages (forecastable maintenance
+windows every controller reads through ``down_oracle``), the faults
+here ride the spec's :class:`~repro.chaos.spec.ChaosSpec`: the engine
+realizes them physically mid-epoch and no controller sees them coming.
+Static plans ride through the fault; the
+:class:`~repro.chaos.controller.ChaosController` reacts — emergency
+re-planning at realized fault boundaries (``decide_fault``) with
+checkpoint-aware cold/live migrations, and telemetry-steered
+forecasting (``partitioned_now`` link-death, ``link_secs_window`` →
+straggler slowdown) at epoch boundaries.
+
+Scenarios (2 edge gateways + the DC; the fault always hits the site
+the fault-free optimum depends on):
+
+  crash_during_burst — the strong gateway hosts the service through a
+                   flash burst and crashes mid-burst. Pinning to it
+                   blocks every fire until recovery; the weak gateway
+                   is latency-marginal at burst rates; the DC drops
+                   fires at burst rates. The chaos controller
+                   evacuates to the farm gateway at the realized crash
+                   boundary (cold-local: replay from the origin log,
+                   zero wire) and migrates back on the heal event
+                   (cold: checkpoint bytes over the wire + replay).
+  partition_heal — the farm gateway's uplink partitions mid-run while
+                   its device keeps working. All-DC offload stalls for
+                   the whole partition; pinning local pays the slow
+                   edge fire forever. The chaos controller flips local
+                   when ``decide_fault`` observes the partition (the
+                   forecast marks the link dead) and offloads again
+                   after the heal.
+  straggler_degrade — the farm uplink degrades to ``factor``×
+                   serialization without dying. Invisible to
+                   ``down_now``/``partitioned_now``: only the per-site
+                   uplink seconds in ``link_secs_window`` give it away,
+                   after the straggler monitor accumulates evidence —
+                   the controller flips local two epochs into the
+                   degradation (the honest price of observing through
+                   telemetry alone) and stays local: once idle, the
+                   sick link emits no telemetry that could clear it.
+
+Acceptance (ISSUE 10, asserted here in both modes):
+  * the chaos controller beats EVERY static plan on every scenario;
+  * exactly-once arm: record conservation holds and no ``duplicates``
+    key appears; at-least-once arm: the ledger's ``duplicates`` equals
+    the replay counts the migration digests declared (never silently
+    lost);
+  * two same-seed chaos runs are bit-identical (vos, ledger totals,
+    full epoch meta);
+  * chaos stays opt-in: re-running a recorded chaos-free benchmark
+    scenario (bench_online diurnal_tide, static all-dc arm) reproduces
+    the committed BENCH_online*.json numbers bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+from repro.chaos import (ChaosController, ChaosSpec, LinkStraggle,
+                         Partition, SiteCrash)
+from repro.online import StaticController, plan_on_average_rates
+from repro.placement import PlacementPlan, ServicePlacement
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, ScenarioBuilder, ScenarioSpec, scenario
+
+
+def _out_path(smoke: bool) -> str:
+    default = "BENCH_chaos_smoke.json" if smoke else "BENCH_chaos.json"
+    return os.environ.get("BENCH_CHAOS_OUT", default)
+
+
+@dataclasses.dataclass
+class ChaosScenario:
+    name: str
+    spec: ScenarioSpec                  # carries the ChaosSpec
+    prior_rates: Dict[str, float]
+    static_plans: Dict[str, PlacementPlan]
+    chips_options: Sequence[int] = (4,)
+    # an extra arm re-run under at_least_once for the duplicates gate
+    ledger_arm: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Shared fabric
+# ---------------------------------------------------------------------------
+def _fabric(name: str, a_rps: float, b_rps: float, uplink_a_bps: float,
+            uplink_b_bps: float = 12e3) -> ScenarioBuilder:
+    """Ingest-bound gateways on the tide fabric; per-scenario record
+    pumps (``*_rps``) set which site is latency-marginal."""
+    return (scenario(name)
+            .site("gw-a", edge=EdgeSpec(name="gw-a", throughput_rps=a_rps,
+                                        active_power_w=1.0,
+                                        energy_per_record_j=50e-6),
+                  link=LinkSpec(uplink_bps=uplink_a_bps, downlink_bps=2e6,
+                                rtt_s=0.040, record_bytes=64.0,
+                                compression=0.25))
+            .site("gw-b", edge=EdgeSpec(name="gw-b", throughput_rps=b_rps,
+                                        flops_per_s=15e9, active_power_w=1.2,
+                                        energy_per_record_j=60e-6),
+                  link=LinkSpec(uplink_bps=uplink_b_bps, downlink_bps=2e6,
+                                rtt_s=0.060, record_bytes=64.0,
+                                compression=0.25)))
+
+
+def _agg_service(b: ScenarioBuilder, soft_energy_j: float = 0.3,
+                 hard_energy_j: float = 3.0) -> ScenarioBuilder:
+    (b.service("agg", queue="neubotspeed", column="download_speed",
+               agg="max", width_s=120, slide_s=30, buffer_budget=8192)
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=soft_energy_j, hard_energy_j=hard_energy_j)
+     .profile(flops_per_record=2e3))
+    return b
+
+
+def _statics() -> Dict[str, PlacementPlan]:
+    return {
+        "pin-gw-a": PlacementPlan.all_edge(["agg"], site="gw-a"),
+        "pin-gw-b": PlacementPlan.all_edge(["agg"], site="gw-b"),
+        "all-dc": PlacementPlan({"agg": ServicePlacement("dc", chips=4)}),
+    }
+
+
+def scenario_crash_during_burst(smoke: bool = False) -> ChaosScenario:
+    """Strong gw-b hosts through the burst; it crashes mid-burst."""
+    horizon = 1800.0 if smoke else 3600.0
+    # burst starts mid-epoch so the next boundary's realized-rate
+    # estimate flips the controller onto strong gw-b BEFORE it crashes
+    burst = (450.0, 1200.0) if smoke else (1350.0, 2400.0)
+    crash = (750.0, 1050.0) if smoke else (1650.0, 2250.0)
+    ch = ChaosSpec(crashes=(SiteCrash(site="gw-b", at_s=crash[0],
+                                      recover_s=crash[1]),),
+                   migration="cold", ledger_mode="exactly_once")
+    b = (_agg_service(_fabric("crash_during_burst", a_rps=1600.0,
+                              b_rps=6000.0, uplink_a_bps=200e3),
+                      soft_energy_j=1.0, hard_energy_j=8.0)
+         .horizon(horizon).epochs(300.0).dc(dc_step_floor_s=0.5)
+         .farm(n_things=8, seed=11, site="gw-a",
+               rate=RateSpec.bursts(2.0, 11.0, [burst]))
+         .chaos(ch))
+    return ChaosScenario("crash_during_burst", b.build(),
+                         prior_rates={"agg": 8.0},
+                         static_plans=_statics(), ledger_arm=True)
+
+
+def scenario_partition_heal(smoke: bool = False) -> ChaosScenario:
+    """Farm gateway partitions: offload stalls, local work survives.
+    The DC is the fault-free optimum; pinning local pays a slow,
+    power-hungry edge fire forever; all-DC defers every fire for the
+    whole partition. The chaos controller flips local at the observed
+    partition (cold-local: replay from the origin log, zero wire) and
+    offloads again at the heal."""
+    horizon = 1800.0 if smoke else 3600.0
+    part = (630.0, 1230.0) if smoke else (1530.0, 2430.0)
+    ch = ChaosSpec(partitions=(Partition(site="gw-a", at_s=part[0],
+                                         heal_s=part[1]),),
+                   migration="cold", ledger_mode="exactly_once")
+    b = (_agg_service(_fabric("partition_heal", a_rps=825.0, b_rps=1000.0,
+                              uplink_a_bps=1e6),
+                      soft_energy_j=3.0, hard_energy_j=60.0)
+         .horizon(horizon).epochs(300.0).dc(dc_step_floor_s=2e-3)
+         .farm(n_things=8, seed=17, site="gw-a",
+               rate=RateSpec.constant(8.0))
+         .chaos(ch))
+    return ChaosScenario("partition_heal", b.build(),
+                         prior_rates={"agg": 64.0},
+                         static_plans=_statics())
+
+
+def scenario_straggler_degrade(smoke: bool = False) -> ChaosScenario:
+    """Farm uplink straggles ×24: alive but slow — invisible to
+    ``down_now``/``partitioned_now``; only the realized per-transfer
+    uplink seconds (``link_secs_window``) betray it, after the
+    straggler monitor accumulates two epochs of evidence. The flip to
+    local therefore lags the onset — the honest price of observing
+    through telemetry alone."""
+    # the ×2 detection lag needs ~3 clean DC epochs before onset and a
+    # few flipped epochs after to amortize, so smoke only shortens the
+    # tail, not the onset
+    horizon = 2700.0 if smoke else 3600.0
+    strag = (930.0, horizon)
+    ch = ChaosSpec(straggles=(LinkStraggle(site="gw-a", at_s=strag[0],
+                                           until_s=strag[1], factor=24.0),),
+                   migration="cold", ledger_mode="exactly_once")
+    b = (_agg_service(_fabric("straggler_degrade", a_rps=825.0,
+                              b_rps=1000.0, uplink_a_bps=50e3),
+                      soft_energy_j=3.0, hard_energy_j=60.0)
+         .horizon(horizon).epochs(300.0).dc(dc_step_floor_s=2e-3)
+         .farm(n_things=8, seed=23, site="gw-a",
+               rate=RateSpec.constant(8.0))
+         .chaos(ch))
+    return ChaosScenario("straggler_degrade", b.build(),
+                         prior_rates={"agg": 64.0},
+                         static_plans=_statics())
+
+
+SCENARIOS = (scenario_crash_during_burst, scenario_partition_heal,
+             scenario_straggler_degrade)
+
+
+# ---------------------------------------------------------------------------
+def _chaos_ctrl(sc: ChaosScenario, seed: int = 0) -> ChaosController:
+    return ChaosController(chips_options=sc.chips_options, window=1,
+                           switch_margin=0.02, seed=seed,
+                           prior_rates=sc.prior_rates)
+
+
+def _replans(summary: Dict) -> List[Dict]:
+    return [e for ep in summary["epochs"] for e in ep.get("chaos", ())]
+
+
+def run_scenario(sc: ChaosScenario, seed: int = 0) -> Dict:
+    t0 = time.perf_counter()
+    cs = sc.spec.compile()
+    true_rates = cs.true_epoch_rates()
+    avg_rates = {s: sum(r[s] for r in true_rates) / len(true_rates)
+                 for s in cs.order}
+
+    # Static arms ride through the same chaos schedule: the physics
+    # (deferred fires, stalled transfers, slowed links) applies to
+    # every controller; only the chaos arm may re-plan around it.
+    statics: Dict[str, Dict] = {}
+    candidates = dict(sc.static_plans)
+    candidates.setdefault("searched-avg", plan_on_average_rates(
+        cs.info(), avg_rates, chips_options=sc.chips_options, seed=seed))
+    best_static = None
+    for label, plan in candidates.items():
+        r = cs.run(StaticController(plan, label=f"static:{label}"))
+        statics[label] = r.summary()
+        if best_static is None or r.vos > best_static[1].vos:
+            best_static = (label, r)
+    assert best_static is not None
+
+    r_chaos = cs.run(_chaos_ctrl(sc, seed))
+    r_repeat = cs.run(_chaos_ctrl(sc, seed))    # determinism probe
+
+    replans = _replans(r_chaos.summary())
+    # reacted to the fault: an emergency mid-epoch re-plan, or (for
+    # faults only telemetry betrays, like stragglers) a boundary flip
+    # to a different plan once the evidence accumulated
+    adapted = bool(replans) or len(
+        {e["plan"] for e in r_chaos.summary()["epochs"]}) > 1
+    conserved = r_chaos.ledger.conserved()
+    totals = r_chaos.ledger.totals()
+    exactly_once = sc.spec.chaos.ledger_mode == "exactly_once"
+    ledger_clean = (("duplicates" not in totals) if exactly_once
+                    else totals.get("duplicates", 0) >= 0)
+    deterministic = (r_chaos.vos == r_repeat.vos
+                     and totals == r_repeat.ledger.totals()
+                     and r_chaos.summary()["epochs"]
+                     == r_repeat.summary()["epochs"])
+    beats_all = all(r_chaos.vos > s["vos"] for s in statics.values())
+
+    out = {
+        "spec": sc.spec.to_dict(),
+        "statics": statics,
+        "best_static": {"label": best_static[0],
+                        "vos": round(best_static[1].vos, 4)},
+        "chaos": r_chaos.summary(),
+        "replans": replans,
+        "migrations": [m for e in replans for m in e["migrations"]],
+        "avg_rates": {k: round(v, 3) for k, v in avg_rates.items()},
+        "acceptance": {
+            "chaos_beats_every_static": bool(beats_all),
+            "adapted_to_fault": adapted,
+            "replanned_mid_epoch": bool(replans),
+            "ledger_conserved": bool(conserved),
+            "ledger_mode_clean": bool(ledger_clean),
+            "deterministic": bool(deterministic),
+        },
+        "wall_s": round(time.perf_counter() - t0, 2),
+    }
+
+    if sc.ledger_arm:
+        # the same fault schedule under at-least-once cutover: replayed
+        # records are double-processed and accounted exactly
+        spec_alo = dataclasses.replace(
+            sc.spec, chaos=dataclasses.replace(sc.spec.chaos,
+                                               ledger_mode="at_least_once"))
+        r_alo = spec_alo.compile().run(_chaos_ctrl(sc, seed))
+        alo_replans = _replans(r_alo.summary())
+        declared = sum(m["replay_records"] for e in alo_replans
+                       for m in e["migrations"] if m["duplicates"])
+        alo_totals = r_alo.ledger.totals()
+        out["at_least_once"] = {
+            "vos": round(r_alo.vos, 4),
+            "declared_replays": declared,
+            "ledger_duplicates": alo_totals.get("duplicates", 0),
+            "conserved": bool(r_alo.ledger.conserved()),
+        }
+        out["acceptance"]["duplicates_accounted"] = bool(
+            declared > 0
+            and alo_totals.get("duplicates", 0) == declared
+            and r_alo.ledger.conserved())
+    return out
+
+
+def _baseline_reproduces(smoke: bool) -> Dict:
+    """Chaos must be opt-in: a chaos-free recorded benchmark scenario
+    re-runs bit-identically against its committed report."""
+    from benchmarks import bench_online
+    path = "BENCH_online_smoke.json" if smoke else "BENCH_online.json"
+    rec_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), path)
+    if not os.path.exists(rec_path):
+        return {"checked": False, "reason": f"{path} not recorded"}
+    with open(rec_path) as f:
+        recorded = json.load(f)["scenarios"]["diurnal_tide"]["statics"]
+    sc = bench_online.scenario_diurnal_tide(smoke=smoke)
+    r = sc.spec.compile().run(
+        StaticController(sc.static_plans["all-dc"], label="static:all-dc"))
+    s = r.summary()
+    ok = (s["vos"] == recorded["all-dc"]["vos"]
+          and s["records"] == recorded["all-dc"]["records"]
+          and not any(ep.get("chaos") for ep in s["epochs"]))
+    return {"checked": True, "scenario": "diurnal_tide", "arm": "all-dc",
+            "recorded_vos": recorded["all-dc"]["vos"],
+            "replayed_vos": s["vos"], "identical": bool(ok)}
+
+
+def main(csv_rows, smoke: bool = False) -> None:
+    print("\n== Chaos & migration: static plans vs chaos-aware controller ==")
+    report: Dict = {"smoke": smoke, "scenarios": {}}
+    makers = SCENARIOS[:1] if smoke else SCENARIOS
+    wins = 0
+    n_replans = 0
+    hard_ok = True
+    dup_ok = True
+    for make in makers:
+        sc = make(smoke=smoke)
+        res = run_scenario(sc)
+        report["scenarios"][sc.name] = res
+        acc = res["acceptance"]
+        wins += acc["chaos_beats_every_static"]
+        n_replans += len(res["replans"])
+        hard_ok &= (acc["ledger_conserved"] and acc["ledger_mode_clean"]
+                    and acc["deterministic"] and acc["adapted_to_fault"])
+        if "duplicates_accounted" in acc:
+            dup_ok &= acc["duplicates_accounted"]
+        migs = res["migrations"]
+        kinds = ",".join(sorted({m["kind"] for m in migs})) or "-"
+        print(f"{sc.name:18s} best-static={res['best_static']['vos']:>9.2f} "
+              f"({res['best_static']['label']}) "
+              f"chaos={res['chaos']['vos']:>9.2f} "
+              f"replans={len(res['replans'])} migs={kinds} "
+              f"[beats-all={acc['chaos_beats_every_static']} "
+              f"ledger={acc['ledger_conserved'] and acc['ledger_mode_clean']} "
+              f"det={acc['deterministic']}]")
+        csv_rows.append((f"chaos_{sc.name}_vos",
+                         res["chaos"]["vos"] * 1e3,
+                         res["chaos"]["epochs"][-1]["plan"]))
+    baseline = _baseline_reproduces(smoke)
+    report["baseline_reproduces"] = baseline
+    base_ok = (not baseline["checked"]) or baseline["identical"]
+    n = len(report["scenarios"])
+    ok = (wins == n and hard_ok and dup_ok and base_ok
+          and n_replans >= 1)
+    report["acceptance"] = {"beats_every_static": wins, "of": n,
+                            "mid_epoch_replans": n_replans,
+                            "duplicates_accounted": bool(dup_ok),
+                            "baseline_identical": bool(base_ok),
+                            "pass": bool(ok)}
+    out = _out_path(smoke)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"chaos beats every static {wins}/{n}, duplicates accounted: "
+          f"{dup_ok}, chaos-free baseline identical: {base_ok} "
+          f"-> {'PASS' if ok else 'FAIL'}; wrote {out}")
+    # chaos gate (scripts/ci.sh): survival must not come at the cost of
+    # accounting — the chaos arm wins, ledgers stay exact, and a
+    # chaos-free run of a recorded scenario is untouched bit-for-bit
+    assert ok, "chaos gate failed (see report acceptance block)"
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main([], smoke="--smoke" in sys.argv)

@@ -14,6 +14,9 @@
                                        decomposed region search +
                                        warm-started online control,
                                        BENCH_fleet.json)
+  chaos   -> bench_chaos              (unplanned mid-epoch faults vs the
+                                       chaos-aware controller,
+                                       BENCH_chaos.json)
   kernels -> bench_kernels            (Pallas vs jnp-oracle microbench)
   §Roofline -> bench_roofline         (dry-run derived terms per cell)
 
@@ -39,7 +42,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,pipeline,placement,online,"
-                         "search,robust,serve,fleet,kernels,roofline")
+                         "search,robust,serve,fleet,chaos,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 scenario per stream bench at "
                          "reduced trace length")
@@ -52,7 +55,7 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only else None
     if (args.smoke or args.calibrate) and want is None:
         want = {"placement", "online", "search", "robust", "serve",
-                "fleet"} if args.smoke else {"placement"}
+                "fleet", "chaos"} if args.smoke else {"placement"}
 
     csv_rows: list = []
     failures = []
@@ -66,10 +69,11 @@ def main() -> None:
             failures.append((tag, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (bench_fleet, bench_kernels, bench_online,
-                            bench_pipeline, bench_placement, bench_robust,
-                            bench_roofline, bench_search_perf, bench_serve,
-                            bench_value_heuristics, bench_power_capping)
+    from benchmarks import (bench_chaos, bench_fleet, bench_kernels,
+                            bench_online, bench_pipeline, bench_placement,
+                            bench_robust, bench_roofline, bench_search_perf,
+                            bench_serve, bench_value_heuristics,
+                            bench_power_capping)
     run("fig4", bench_value_heuristics.main, csv_rows)
     run("fig5", bench_power_capping.main, csv_rows,
         emulate=not args.no_emulation)
@@ -81,6 +85,7 @@ def main() -> None:
     run("robust", bench_robust.main, csv_rows, smoke=args.smoke)
     run("serve", bench_serve.main, csv_rows, smoke=args.smoke)
     run("fleet", bench_fleet.main, csv_rows, smoke=args.smoke)
+    run("chaos", bench_chaos.main, csv_rows, smoke=args.smoke)
     run("kernels", bench_kernels.main, csv_rows)
     run("roofline", bench_roofline.main, csv_rows)
 

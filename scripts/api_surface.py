@@ -45,6 +45,10 @@ SURFACE = {
         "regions_view", "FleetGenSpec", "generate_fleet", "hier_fleet_spec",
         "RegionPartition", "partition_services", "region_search",
         "region_search_exact"),
+    "repro.chaos": (
+        "ChaosSpec", "SiteCrash", "Partition", "LinkStraggle",
+        "ChaosTimeline", "FaultObservation", "ChaosMigration",
+        "plan_chaos_migrations", "ChaosController"),
     "repro.serve": (
         "ServeRuntime", "ServeConfig", "serve_scenario", "VirtualClock",
         "ServeTelemetry", "StageFire", "ServiceStage", "FarmDriver",
@@ -66,11 +70,15 @@ def check_exports() -> int:
 
 
 def check_roundtrips() -> int:
-    from benchmarks import bench_online, bench_placement
+    from benchmarks import bench_chaos, bench_online, bench_placement
     from repro.scenario import ScenarioSpec
 
     specs = [make().spec for make in bench_placement.SCENARIOS]
     for make in bench_online.SCENARIOS:
+        specs.append(make(smoke=True).spec)
+        specs.append(make(smoke=False).spec)
+    # chaos specs ride the same ScenarioSpec JSON (ChaosSpec is a field)
+    for make in bench_chaos.SCENARIOS:
         specs.append(make(smoke=True).spec)
         specs.append(make(smoke=False).spec)
     # a generated hierarchical fleet (regions + RAP trunks, including

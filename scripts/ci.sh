@@ -72,6 +72,13 @@ if [[ "${CI_SKIP_BENCH_SMOKE:-0}" != "1" ]]; then
     # warm-started online controller beating the best static plan, the
     # search phase holding >= 3x its recorded pre-optimization wall, and
     # a 2-worker ParallelEvaluator re-search reproducing the serial
-    # winner bit-identically (planet-scale fleet + parallel gate)
+    # winner bit-identically (planet-scale fleet + parallel gate),
+    # and bench_chaos --smoke, which *asserts* the chaos-aware
+    # controller beats every static plan through an unplanned mid-epoch
+    # fault with at least one emergency re-plan, record ledgers stay
+    # conserved (exactly-once: no duplicates key; at-least-once:
+    # duplicates == declared migration replays), same-seed runs are
+    # bit-identical, and a recorded chaos-free benchmark scenario
+    # replays bit-identically (chaos & migration gate)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
 fi

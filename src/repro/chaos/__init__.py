@@ -1,0 +1,14 @@
+from repro.chaos.spec import (ChaosSpec, SiteCrash, Partition,
+                              LinkStraggle)
+from repro.chaos.inject import ChaosTimeline, FaultObservation
+from repro.chaos.migrate import ChaosMigration, plan_chaos_migrations
+
+
+def __getattr__(name):
+    # ChaosController pulls in the whole online/search stack; lazy so
+    # `scenario.spec -> chaos.spec` never re-enters a partially
+    # initialized `repro.scenario` through `online.controller`.
+    if name == "ChaosController":
+        from repro.chaos.controller import ChaosController
+        return ChaosController
+    raise AttributeError(name)

@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
                                    latest_step, CheckpointManager)
-from repro.checkpoint.failure import FailureInjector, run_with_restarts
+from repro.checkpoint.failure import (FailureInjector, NodeFailure,
+                                      run_with_restarts)

@@ -44,11 +44,11 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, *,
-                    blocking: bool = True,
-                    _executor=concurrent.futures.ThreadPoolExecutor(1)):
+                    blocking: bool = True, executor=None):
     """Write `tree` at `step` atomically (tmp + rename). With
-    blocking=False the device→host transfer happens now but the file write
-    is async (returns a future)."""
+    blocking=False and an `executor`, the device→host transfer happens
+    now but the file write is async (returns a future). The caller owns
+    the executor's lifecycle; without one the write is synchronous."""
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)  # device→host sync point
 
@@ -63,9 +63,9 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
                        "steps": sorted(all_steps(ckpt_dir))}, f)
         return final
 
-    if blocking:
+    if blocking or executor is None:
         return _write()
-    return _executor.submit(_write)
+    return executor.submit(_write)
 
 
 def all_steps(ckpt_dir: str) -> List[int]:
@@ -112,6 +112,10 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._pending = None
+        # Each manager owns its write thread (created lazily, shut down
+        # in finalize) so async writes from different managers never
+        # serialize through a shared module-level executor.
+        self._executor = None
 
     def maybe_save(self, step: int, tree) -> bool:
         if step % self.save_every:
@@ -119,8 +123,11 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.result()  # one write in flight at a time
             self._pending = None
+        if self.async_write and self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(1)
         res = save_checkpoint(self.dir, step, tree,
-                              blocking=not self.async_write)
+                              blocking=not self.async_write,
+                              executor=self._executor)
         if not isinstance(res, str):
             self._pending = res
         self._gc()
@@ -130,6 +137,9 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.result()
             self._pending = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
         self._gc()
 
     def _gc(self):

@@ -21,7 +21,6 @@ class FailureInjector:
     fail_steps: Optional[List[int]] = None   # deterministic alternative
 
     def __post_init__(self):
-        self._rng = random.Random(self.seed)
         self._fired = set()
 
     def should_fail(self, step: int) -> bool:
@@ -32,7 +31,33 @@ class FailureInjector:
                 self._fired.add(step)
                 return True
             return False
-        return self._rng.random() < self.p_fail
+        if self.p_fail <= 0.0:
+            return False
+        # Step-keyed draw: replaying a step after a restart probes the
+        # SAME coin the uninterrupted run would, so chaos schedules are
+        # deterministic under replay. Fire-once per step (like
+        # fail_steps) — the replacement node survives the replay.
+        if step in self._fired:
+            return False
+        if random.Random(self._key(step)).random() < self.p_fail:
+            self._fired.add(step)
+            return True
+        return False
+
+    def _key(self, step: int) -> int:
+        # int key (tuple seeding is hash-based and deprecated)
+        return (self.seed << 32) ^ step
+
+    def fail_times(self, n_steps: int):
+        """The deterministic set of steps that would fire over `n_steps`
+        probes, independent of any consumed state (step-keyed draws)."""
+        if self.fail_steps is not None:
+            return sorted(s for s in set(self.fail_steps)
+                          if 0 <= s < n_steps)
+        if self.p_fail <= 0.0:
+            return []
+        return [s for s in range(n_steps)
+                if random.Random(self._key(s)).random() < self.p_fail]
 
 
 class NodeFailure(RuntimeError):
@@ -76,5 +101,10 @@ def run_with_restarts(*, init_state, train_one_step: Callable,
             except FileNotFoundError:
                 state, ck_step = init_state, 0
             step = ck_step
+            # drop history for steps the restore rewound past — the
+            # replay will re-append them (history stays strictly
+            # increasing in step)
+            while history and history[-1][0] >= ck_step:
+                history.pop()
     ckpt_manager.finalize()
     return state, history, restarts

@@ -31,6 +31,12 @@ from repro.scenario.observe import BridgeInfo, EpochObservation
 from repro.scenario.feedback import CalibrationLoop, ServiceCorrection
 from repro.scenario.queueing import q_factor
 
+# latency penalty standing in for "this transfer cannot complete": a
+# partitioned link makes any plan that needs it rank to ~zero value
+# while staying feasible (local-only work on the partitioned site is
+# still worth doing — partition is not outage)
+_LINK_DEAD_S = 1e7
+
 
 @dataclasses.dataclass
 class ForecastResult:
@@ -57,12 +63,20 @@ class ForecastModel:
     def __init__(self, info: BridgeInfo, rates: Mapping[str, float],
                  down: Optional[Mapping[str, bool]] = None,
                  corrections: Optional[Mapping[str, ServiceCorrection]]
-                 = None):
+                 = None,
+                 link_slowdown: Optional[Mapping[str, float]] = None,
+                 link_dead: Optional[Mapping[str, bool]] = None):
         self.info = info
         self.topology = info.topology
         self.rates = dict(rates)
         self.down = dict(down or {})
         self.corrections = dict(corrections or {})
+        # chaos-telemetry steering (ChaosController): per-site uplink
+        # serialization inflation and realized link partitions. Empty
+        # maps are bit-identical to the un-steered model (×1.0, no
+        # penalties).
+        self.link_slowdown = dict(link_slowdown or {})
+        self.link_dead = dict(link_dead or {})
         self._nodes = {s.name: EdgeNode(s.edge) for s in info.fleet.sites}
         # hierarchy: per-region edge tiers + RAP trunks (flat fleets are
         # one transparent region — every trunk term is zero and the
@@ -79,6 +93,12 @@ class ForecastModel:
         if src == SITE_DC or dst == SITE_DC:
             return True
         return self._region_of[src] != self._region_of[dst]
+
+    def _slow(self, site: str) -> float:
+        return self.link_slowdown.get(site, 1.0)
+
+    def _dead(self, site: str) -> bool:
+        return site != SITE_DC and bool(self.link_dead.get(site))
 
     # ------------------------------------------------------------- helpers
     def _n_window(self, svc: str) -> float:
@@ -165,7 +185,8 @@ class ForecastModel:
             net = info.fleet.site(src).link
             wire = self._n_new(s) * net.record_bytes * net.compression
             rj = self._region_of[src]
-            up_load[rj] += wire / net.uplink_bps / i.slide_s
+            up_load[rj] += wire / net.uplink_bps / i.slide_s \
+                * self._slow(src)
             rap = self._rap[rj]
             if rap is not None and self._crosses(src, dst):
                 rap_load[rj] += wire / rap.uplink_bps / i.slide_s
@@ -240,11 +261,14 @@ class ForecastModel:
                     rj = self._region_of[src]
                     wire = n_new * net.record_bytes * net.compression
                     xfer = (net.rtt_s / 2
-                            + wire / net.uplink_bps * q_up[rj])
+                            + wire / net.uplink_bps * q_up[rj]
+                            * self._slow(src))
                     rap = self._rap[rj]
                     if rap is not None:   # edge→DC always transits the core
                         xfer += (rap.rtt_s / 2
                                  + wire / rap.uplink_bps * q_rap[rj])
+                    if self._dead(src):   # records cannot leave the site
+                        xfer += _LINK_DEAD_S
                 t_step = info.cost.time_per_step(f"svc:{s}", "window",
                                                  p.chips, p.dvfs_f)
                 dl = info.fleet.site(user).link.rtt_s / 2
@@ -253,6 +277,8 @@ class ForecastModel:
                     dl += (rap_u.rtt_s / 2
                            + info.fleet.site(user).link.result_bytes
                            / rap_u.downlink_bps)
+                if self._dead(user):    # results cannot reach the user
+                    dl += _LINK_DEAD_S
                 lat = (hop + xfer + self._dc_steps(s) * t_step * dc_over
                        + dl)
                 energy = self._dc_steps(s) * info.cost.energy_per_step(
@@ -309,6 +335,8 @@ class ForecastModel:
                     h += (rapd.rtt_s / 2
                           + self.info.fleet.site(my).link.result_bytes
                           / rapd.downlink_bps)
+            if self._dead(us) or self._dead(my):
+                h += _LINK_DEAD_S
             t = max(t, h)
         return t
 
@@ -320,11 +348,14 @@ class ForecastModel:
         src, dst = self._origin_site(svc, plan), plan.site(svc)
         if src == dst or src == SITE_DC:
             return 0.0
+        if self._dead(src) or self._dead(dst):
+            return _LINK_DEAD_S
         snet = self.info.fleet.site(src).link
         dnet = self.info.fleet.site(dst).link
         rj = self._region_of[src]
         wire = n_new * snet.record_bytes * snet.compression
-        base = (snet.rtt_s / 2 + wire / snet.uplink_bps * q_up[rj]
+        base = (snet.rtt_s / 2
+                + wire / snet.uplink_bps * q_up[rj] * self._slow(src)
                 + dnet.rtt_s / 2
                 + n_new * dnet.record_bytes / dnet.downlink_bps)
         if not self._hier or not self._crosses(src, dst):
@@ -467,6 +498,14 @@ class OnlineController:
     def _down(self, obs: EpochObservation) -> Dict[str, bool]:
         return obs.down_now
 
+    def _make_model(self, rates: Mapping[str, float],
+                    down: Mapping[str, bool], corr) -> ForecastModel:
+        """Model-construction hook: chaos-aware subclasses inject
+        telemetry-derived link state here. Subclasses that do MUST also
+        extend ``_model_fingerprint`` with the same state, or the
+        cross-epoch score memo serves stale scores."""
+        return ForecastModel(self.info, rates, down, corrections=corr)
+
     def _model_fingerprint(self, rates: Mapping[str, float],
                            down: Mapping[str, bool],
                            corr) -> Tuple:
@@ -583,7 +622,7 @@ class OnlineController:
         if self.calibration is not None:
             self._absorb_residuals(obs)
             corr = self.calibration.corrections()
-        model = ForecastModel(self.info, rates, down, corrections=corr)
+        model = self._make_model(rates, down, corr)
         up_sites = tuple(s for s in self.info.fleet.site_names
                          if not down.get(s))
         edge_sites = up_sites or self.info.fleet.site_names

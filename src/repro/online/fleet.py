@@ -128,6 +128,10 @@ class LinkQueue:
         self.busy_until = 0.0
         self.queue_wait_s = 0.0     # total time transfers sat in the FIFO
         self.transfers = 0
+        # admission log [ready_ts, serialization_s, active] — lets an
+        # admitted-but-unserviced transfer be withdrawn (its source site
+        # died before the pipe got to it) with exact FIFO restoration
+        self._log: List[List] = []
 
     def admit(self, ready_ts: float, serialization_s: float) -> float:
         """Returns the time the transfer starts serializing."""
@@ -135,7 +139,40 @@ class LinkQueue:
         self.queue_wait_s += start - ready_ts
         self.busy_until = start + serialization_s
         self.transfers += 1
+        self._log.append([ready_ts, serialization_s, True])
         return start
+
+    @property
+    def last_token(self) -> int:
+        """Token of the most recent admission (pass to ``withdraw``)."""
+        return len(self._log) - 1
+
+    def withdraw(self, token: int) -> bool:
+        """Withdraw admission ``token`` and restore ``busy_until`` /
+        ``queue_wait_s`` / ``transfers`` exactly as if it had never been
+        admitted (the remaining admissions replay in order). Returns
+        False when the token was already withdrawn."""
+        if token < 0 or token >= len(self._log) or not self._log[token][2]:
+            return False
+        self._log[token][2] = False
+        self.busy_until = 0.0
+        self.queue_wait_s = 0.0
+        self.transfers = 0
+        for ready_ts, ser, active in self._log:
+            if not active:
+                continue
+            start = max(ready_ts, self.busy_until)
+            self.queue_wait_s += start - ready_ts
+            self.busy_until = start + ser
+            self.transfers += 1
+        return True
+
+    def withdraw_last(self) -> bool:
+        """Withdraw the most recent still-active admission."""
+        for i in range(len(self._log) - 1, -1, -1):
+            if self._log[i][2]:
+                return self.withdraw(i)
+        return False
 
 
 class ContendedUplink(LinkQueue):
@@ -146,37 +183,78 @@ class ContendedUplink(LinkQueue):
 
 class EdgeSite:
     """Live state of one gateway: serial device + link accounting +
-    failure windows."""
+    failure windows. ``outages`` are the *scheduled* maintenance windows
+    (the oracle may read them); ``crashes`` / ``partitions`` /
+    ``straggles`` are realized chaos windows kept separate so planning
+    stays blind to them — a crash downs device *and* link, a partition
+    downs only the link, a straggle multiplies link serialization."""
 
     def __init__(self, spec: SiteSpec,
-                 outages: Sequence[Tuple[float, float]] = ()):
+                 outages: Sequence[Tuple[float, float]] = (),
+                 crashes: Sequence[Tuple[float, float]] = (),
+                 partitions: Sequence[Tuple[float, float]] = (),
+                 straggles: Sequence[Tuple[float, float, float]] = ()):
         self.spec = spec
         self.node = EdgeNode(spec.edge)
         self.net = NetworkModel(spec.link)
         self.outages = sorted(outages)
+        self.crashes = sorted(crashes)
+        self.partitions = sorted(partitions)
+        self.straggles = sorted(straggles)
+        # device-down = scheduled outage OR unplanned crash;
+        # link-dead = crash OR partition
+        self._device_down = sorted(self.outages + self.crashes)
+        self._link_dead = sorted(self.crashes + self.partitions)
+        # realized uplink occupancy (chaos telemetry feed): seconds the
+        # site's transfers held a shared pipe, and how many transfers
+        self.link_busy_s = 0.0
+        self.link_transfers = 0
 
     def available_at(self, t: float) -> float:
-        """Earliest time >= t at which the device is not in an outage."""
-        for down, up in self.outages:
+        """Earliest time >= t at which the device is not down."""
+        for down, up in self._device_down:
             if down <= t < up:
                 return up
         return t
 
     def failed_at(self, t: float) -> bool:
-        return any(down <= t < up for down, up in self.outages)
+        return any(down <= t < up for down, up in self._device_down)
+
+    def crashed_at(self, t: float) -> bool:
+        return any(lo <= t < hi for lo, hi in self.crashes)
+
+    def partitioned_at(self, t: float) -> bool:
+        return any(lo <= t < hi for lo, hi in self.partitions)
+
+    def link_blocked_until(self, t: float) -> Optional[float]:
+        """End of the link-dead (crash ∪ partition) window covering
+        ``t``, or None when the link is up."""
+        out = None
+        for lo, hi in self._link_dead:
+            if lo <= t < hi:
+                out = hi if out is None else max(out, hi)
+        return out
+
+    def straggle_factor(self, t: float) -> float:
+        f = 1.0
+        for lo, hi, fac in self.straggles:
+            if lo <= t < hi:
+                f = max(f, fac)
+        return f
 
     def execute_fire(self, ready_ts: float, n_records: int,
                      flops_per_record: float = 0.0) -> FireExec:
-        """Serial execution with outage deferral: a down site executes
-        nothing, so any fire whose execution would *overlap* an outage
-        window (including one that would start just before the site
-        fails) is deferred to recovery."""
+        """Serial execution with down-window deferral: a down site
+        (scheduled outage or unplanned crash) executes nothing, so any
+        fire whose execution would *overlap* a down window (including
+        one that would start just before the site fails) is deferred to
+        recovery."""
         dur = self.node.fire_time(n_records, flops_per_record)
         start = max(ready_ts, self.node.busy_until)
         moved = True
         while moved:
             moved = False
-            for down, up in self.outages:
+            for down, up in self._device_down:
                 if start < up and start + dur > down:
                     start = max(up, self.node.busy_until)
                     moved = True
@@ -193,14 +271,24 @@ class Fleet:
 
     def __init__(self, spec: FleetSpec,
                  outages: Optional[Mapping[str, Sequence[Tuple[float, float]]]]
-                 = None):
+                 = None, chaos=None):
         self.spec = spec
         outages = outages or {}
         unknown = set(outages) - set(spec.site_names)
         if unknown:
             raise ValueError(f"outages for unknown sites: {sorted(unknown)}")
+        # chaos: an optional compiled ChaosTimeline — per-site realized
+        # crash/partition/straggle windows injected physically (and kept
+        # apart from the forecastable `outages`). None → every chaos
+        # path below is dormant and routing is bit-identical.
+        self.chaos = chaos
         self.sites: Dict[str, EdgeSite] = {
-            s.name: EdgeSite(s, outages.get(s.name, ())) for s in spec.sites}
+            s.name: EdgeSite(
+                s, outages.get(s.name, ()),
+                crashes=chaos.crash_windows(s.name) if chaos else (),
+                partitions=chaos.partition_windows(s.name) if chaos else (),
+                straggles=chaos.straggle_windows(s.name) if chaos else ())
+            for s in spec.sites}
 
         regions = tuple(getattr(spec, "regions", ()) or ())
         if regions:
@@ -262,6 +350,28 @@ class Fleet:
         return self._region_of[src] != self._region_of[dst]
 
     # ------------------------------------------------------------- routing
+    def _admit_src(self, site: EdgeSite, region: int, ser0: float,
+                   ready_ts: float) -> Tuple[float, float]:
+        """Admit one uplink serialization for ``site``, chaos-aware:
+        a straggling link inflates the serialization, and a transfer
+        admitted into a dead-link window (the source crashed or
+        partitioned before the pipe got to it) is *withdrawn* and
+        re-admitted at heal. Without chaos windows this is exactly one
+        ``admit`` at ×1.0. Returns ``(start, serialization_s)``."""
+        q = self._edge_q[region]
+        ser = ser0 * site.straggle_factor(ready_ts)
+        start = q.admit(ready_ts, ser)
+        while True:
+            blocked = site.link_blocked_until(start)
+            if blocked is None:
+                break
+            q.withdraw_last()
+            ser = ser0 * site.straggle_factor(blocked)
+            start = q.admit(blocked, ser)
+        site.link_busy_s += ser
+        site.link_transfers += 1
+        return start, ser
+
     def ship_records(self, src: str, dst: str, n_records: int,
                      ready_ts: float) -> float:
         """Route ``n_records`` raw records src→dst; returns their arrival
@@ -272,8 +382,8 @@ class Fleet:
         cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
-            ser = site.net.uplink_serialization_s(n_records)
-            start = self._edge_q[self._region_of[src]].admit(t, ser)
+            ser0 = site.net.uplink_serialization_s(n_records)
+            start, ser = self._admit_src(site, self._region_of[src], ser0, t)
             site.net.uplink(n_records)          # bytes + NIC energy
             t = start + ser + site.net.spec.rtt_s / 2
             if cross:
@@ -281,6 +391,9 @@ class Fleet:
                                  site.net.uplink_wire_bytes(n_records), t)
         if dst != SITE_DC:
             dsite = self.sites[dst]
+            blocked = dsite.link_blocked_until(t)
+            if blocked is not None:   # dst link dead: delivery waits for heal
+                t = blocked
             if cross:
                 t = self._rap_down(self._region_of[dst],
                                    n_records * dsite.net.spec.record_bytes, t)
@@ -297,8 +410,8 @@ class Fleet:
         cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
-            ser = site.net.spec.result_bytes / site.net.spec.uplink_bps
-            start = self._edge_q[self._region_of[src]].admit(t, ser)
+            ser0 = site.net.spec.result_bytes / site.net.spec.uplink_bps
+            start, ser = self._admit_src(site, self._region_of[src], ser0, t)
             site.net.bytes_up += site.net.spec.result_bytes
             site.net.energy_j += (site.net.spec.result_bytes
                                   * site.net.spec.energy_per_byte_j)
@@ -308,6 +421,9 @@ class Fleet:
                                  site.net.spec.result_bytes, t)
         if dst != SITE_DC:
             dsite = self.sites[dst]
+            blocked = dsite.link_blocked_until(t)
+            if blocked is not None:
+                t = blocked
             if cross:
                 t = self._rap_down(self._region_of[dst],
                                    dsite.net.spec.result_bytes, t)
@@ -325,8 +441,8 @@ class Fleet:
         cross = self._crosses_core(src, dst)
         if src != SITE_DC:
             site = self.sites[src]
-            ser = state_bytes / site.net.spec.uplink_bps
-            start = self._edge_q[self._region_of[src]].admit(t, ser)
+            ser0 = state_bytes / site.net.spec.uplink_bps
+            start, ser = self._admit_src(site, self._region_of[src], ser0, t)
             site.net.bytes_up += state_bytes
             site.net.energy_j += state_bytes * site.net.spec.energy_per_byte_j
             t = start + ser + site.net.spec.rtt_s / 2
@@ -334,6 +450,9 @@ class Fleet:
                 t = self._rap_up(self._region_of[src], state_bytes, t)
         if dst != SITE_DC:
             site = self.sites[dst]
+            blocked = site.link_blocked_until(t)
+            if blocked is not None:
+                t = blocked
             if cross:
                 t = self._rap_down(self._region_of[dst], state_bytes, t)
             t += (site.net.spec.rtt_s / 2

@@ -58,6 +58,23 @@ class StragglerMonitor:
     def persistent_stragglers(self, threshold: int = 3) -> List[int]:
         return [h for h, n in self.flags.items() if n >= threshold]
 
+    def slowdown_factor(self, host: int) -> float:
+        """Estimated slowdown of `host` relative to the window median
+        (>= 1.0): the mitigation knob a chaos-aware planner multiplies
+        the host's serialization/step model by. Zero samples (an idle
+        host) contribute nothing."""
+        samples = [row[host] for row in self.history
+                   if host < len(row) and row[host] > 0.0]
+        if not samples:
+            return 1.0
+        all_t = sorted(t for row in self.history for t in row if t > 0.0)
+        if not all_t:
+            return 1.0
+        med = all_t[len(all_t) // 2]
+        if med <= 0.0:
+            return 1.0
+        return max(1.0, (sum(samples) / len(samples)) / med)
+
 
 class BackupStepPolicy:
     """Speculative re-execution: when a host misses the deadline, its shard

@@ -43,6 +43,9 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import hardware as hw
+from repro.chaos.inject import ChaosTimeline, FaultObservation
+from repro.chaos.migrate import plan_chaos_migrations
+from repro.chaos.spec import ChaosSpec
 from repro.core.costmodel import CellCost, CostModel
 from repro.core.elastic import (SERVICE_WARMUP_S, ServiceMigration,
                                 plan_replacement)
@@ -91,6 +94,9 @@ class EngineConfig:
     # operator ships compacted window state (partial aggregates + record
     # index), not the raw 64 B in-RAM records.
     state_bytes_per_record: float = 16.0
+    # Unplanned-fault injection (None = no chaos; every chaos code path
+    # is dormant and the engine is bit-identical to the pre-chaos one).
+    chaos: Optional[ChaosSpec] = None
 
 
 def single_site_fleet(edge: Optional[EdgeSpec] = None,
@@ -446,10 +452,18 @@ class ScenarioEngine:
         info = self.services_info[svc]
         return info.buffer_budget * self.cfg.state_bytes_per_record
 
+    def _plan_at(self, ts: float) -> PlacementPlan:
+        """Plan governing a fire with timestamp ``ts``. Plans are keyed
+        by *adoption time* (epoch boundaries, plus mid-epoch chaos
+        re-plans), so with one plan per epoch this is exactly the old
+        ``self._plans[fire.epoch]`` lookup."""
+        i = bisect.bisect_right(self._plan_times, ts) - 1
+        return self._plans[i if i >= 0 else 0]
+
     def _origin_site(self, f: _OFire, origin: Optional[str]) -> str:
         if origin is None:
             return self.cfg.fleet.farm_site(self.services_info[f.svc].queue)
-        return self._plans[f.epoch].site(origin)
+        return self._plan_at(f.ts).site(origin)
 
     def _avail(self, svc: str, ts: float) -> float:
         t = 0.0
@@ -524,7 +538,7 @@ class ScenarioEngine:
         return t
 
     def _make_task(self, f: _OFire, arrival: float) -> Task:
-        p = self._plans[f.epoch].placement(f.svc)
+        p = self._plan_at(f.ts).placement(f.svc)
         prof = self.profiles[f.svc]
         shift = ((arrival - f.ts)
                  + self._fleet.downlink_time(self.cfg.fleet.result_site))
@@ -552,7 +566,7 @@ class ScenarioEngine:
                 if i >= len(arr):
                     continue
                 f = arr[i]
-                if f.ts >= limit_ts or f.epoch >= len(self._plans):
+                if f.ts >= limit_ts or f.epoch >= self._epochs_planned:
                     continue
                 if not self._deps_settled(f):
                     continue
@@ -563,7 +577,7 @@ class ScenarioEngine:
                 return progressed
             f = best
             svc, i = f.svc, f.idx
-            f.site = self._plans[f.epoch].site(svc)
+            f.site = self._plan_at(f.ts).site(svc)
             base = max(self._dep_time(f, f.site), self._avail(svc, f.ts))
             in_ready = self._ship_inputs(f, base)
             if f.site == SITE_DC:
@@ -695,6 +709,131 @@ class ScenarioEngine:
             cursor = min(nxt)
             self._sim.run_until(cursor)
 
+    # ------------------------------------------------------------ chaos path
+    def _advance_epoch(self, controller, k: int, t0: float, t1: float,
+                       charge: bool, rates_k: Dict[str, float]) -> List[Dict]:
+        """Advance one epoch, cutting at realized fault boundaries so a
+        chaos-aware controller (one exposing ``decide_fault``) can
+        re-plan mid-epoch. The controller sees only the realized world at
+        the cut (a :class:`FaultObservation`), never the fault schedule.
+        Chaos-free runs — and controllers without ``decide_fault`` —
+        take the single-segment path, bit-identical to the old loop."""
+        react = (self._timeline is not None
+                 and getattr(controller, "decide_fault", None) is not None)
+        cuts = self._timeline.boundaries(t0, t1) if react else []
+        log: List[Dict] = []
+        cur = t0
+        names = self.cfg.fleet.site_names
+        for T in cuts:
+            self._advance(cur, T)
+            self._sim.run_until(T)
+            self._collect_dc()
+            cur = T
+            fobs = FaultObservation(
+                t=T, epoch=k,
+                down_now={s: self._fleet.site(s).failed_at(T)
+                          for s in names},
+                partitioned_now={s: self._fleet.site(s).partitioned_at(T)
+                                 for s in names},
+                straggle_now={s: self._fleet.site(s).straggle_factor(T)
+                              for s in names},
+                events=self._timeline.events_at(T))
+            plan = controller.decide_fault(fobs)
+            if plan is not None:
+                log.append(self._adopt_replan(plan, T, k, fobs, charge,
+                                              rates_k))
+        self._advance(cur, t1)
+        return log
+
+    def _adopt_replan(self, plan: PlacementPlan, T: float, k: int,
+                      fobs: FaultObservation, charge: bool,
+                      rates_k: Dict[str, float]) -> Dict:
+        """Adopt an emergency mid-epoch plan at time ``T``: charge the
+        checkpoint-aware live/cold migrations (never the raw-state
+        epoch-boundary cost model) and key the plan by adoption time so
+        only fires with ``ts >= T`` execute under it."""
+        plan.validate(self.topology,
+                      grid_chips=self.cfg.grid_shape[0]
+                      * self.cfg.grid_shape[1],
+                      sites=self.all_sites)
+        bad = self._site_ram_ok(plan)
+        if bad is not None:
+            raise ValueError(f"epoch {k}: infeasible fault re-plan: {bad}")
+        old = self._plans[-1]
+        chaos = self.cfg.chaos
+        ck = max(1, chaos.checkpoint_every)
+
+        def _replay_records(svc: str) -> int:
+            # fires the source covered since its newest checkpoint
+            # (cadence: one save every `ck` fires)
+            i_t = bisect.bisect_right(self._ts[svc], T)
+            return sum(f.n_new
+                       for f in self._fires[svc][(i_t // ck) * ck:i_t])
+
+        def _replay_time(svc: str, n: int, dst: str) -> float:
+            if dst == SITE_DC:
+                p = plan.placement(svc)
+                steps = max(1, math.ceil(n / self.cfg.records_per_step))
+                return steps * self.cost.time_per_step(
+                    f"svc:{svc}", "window", p.chips, p.dvfs_f)
+            return self._fleet.site(dst).node.fire_time(
+                n, self.profiles[svc].flops_per_record)
+
+        def _drain(svc: str) -> float:
+            src = old.site(svc)
+            if src == SITE_DC:
+                return 0.0
+            return max(0.0, self._fleet.site(src).node.busy_until - T)
+
+        def _src_dead(s: str) -> bool:
+            if s == SITE_DC:
+                return False
+            site = self._fleet.site(s)
+            return site.crashed_at(T) or site.partitioned_at(T)
+
+        def _local_origin(svc: str, dst: str) -> bool:
+            return (not self.topology[svc]
+                    and self.cfg.fleet.farm_site(
+                        self.services_info[svc].queue) == dst)
+
+        def _ckpt_bytes(svc: str) -> float:
+            return (self.services_info[svc].buffer_budget
+                    * chaos.checkpoint_bytes_per_record)
+
+        migs = plan_chaos_migrations(
+            chaos, old.assignments, plan.assignments, T,
+            src_dead=_src_dead, ship=self._fleet.ship_state,
+            state_bytes=self._state_bytes, ckpt_bytes=_ckpt_bytes,
+            replay_records=_replay_records, replay_time=_replay_time,
+            rate_rps=lambda svc: rates_k.get(svc, 0.0),
+            drain_s=_drain, dc_site=SITE_DC, local_origin=_local_origin,
+            warmup_s=self.cfg.migration_warmup_s, charge=charge)
+        for m in migs:
+            if charge:
+                self._stalls.setdefault(m.service, []).append(
+                    (T, T + m.stall_s))
+            if m.duplicates:
+                self._duplicates[m.service] = (
+                    self._duplicates.get(m.service, 0) + m.duplicates)
+        self._plans.append(plan)
+        self._plan_times.append(T)
+        return {"t": round(T, 6), "plan": plan.label,
+                "trigger": list(fobs.events),
+                "migrations": [m.digest() for m in migs]}
+
+    def _snap_link_secs(self) -> None:
+        """Close the epoch's uplink telemetry window: mean serialization
+        seconds per transfer at each site since the previous boundary
+        (a straggling link surfaces here, and only here)."""
+        out: Dict[str, float] = {}
+        for s in self.cfg.fleet.site_names:
+            site = self._fleet.site(s)
+            b0, n0 = self._link_snap[s]
+            db, dn = site.link_busy_s - b0, site.link_transfers - n0
+            self._link_snap[s] = (site.link_busy_s, site.link_transfers)
+            out[s] = db / dn if dn > 0 else 0.0
+        self._link_secs.append(out)
+
     # ------------------------------------------------------- realized value
     def _settle_value(self, svc: str, f: _OFire) -> None:
         """Realized value + end-to-end latency of a terminal fire,
@@ -759,7 +898,10 @@ class ScenarioEngine:
         :meth:`run_plan`). Raises ValueError on an infeasible plan."""
         pipe, staps, qtaps = self._ensure_driven()
         cfg = self.cfg
-        self._fleet = Fleet(cfg.fleet, self.outages)
+        self._timeline = (ChaosTimeline.compile(
+            cfg.chaos, cfg.fleet.site_names, cfg.horizon_s, self.epochs)
+            if cfg.chaos is not None else None)
+        self._fleet = Fleet(cfg.fleet, self.outages, chaos=self._timeline)
         self._dl_user = self._fleet.downlink_time(cfg.fleet.result_site)
         self._vspec = {s: self.profiles[s].slo.value_spec()
                        for s in self.order}
@@ -787,6 +929,11 @@ class ScenarioEngine:
         self._dep_ptr: Dict[Tuple[str, str, str], Tuple[int, float]] = {}
         self._stalls: Dict[str, List[Tuple[float, float]]] = {}
         self._plans: List[PlacementPlan] = []
+        self._plan_times: List[float] = []      # adoption time of each plan
+        self._epochs_planned = 0                # epoch-boundary decisions only
+        self._duplicates: Dict[str, int] = {}   # at-least-once double passes
+        self._link_secs: List[Dict[str, float]] = []
+        self._link_snap = {s: (0.0, 0) for s in cfg.fleet.site_names}
         self._next_tid = 0
         true_rates = self.true_epoch_rates()
         charge = getattr(controller, "charge_migrations", True)
@@ -807,7 +954,10 @@ class ScenarioEngine:
                 rates_oracle=dict(true_rates[k]),
                 down_oracle={s: any(d < t1 and u > t0
                                     for d, u in self._fleet.site(s).outages)
-                             for s in cfg.fleet.site_names})
+                             for s in cfg.fleet.site_names},
+                partitioned_now={s: self._fleet.site(s).partitioned_at(t0)
+                                 for s in cfg.fleet.site_names},
+                link_secs_window=[dict(d) for d in self._link_secs])
             plan = controller.decide(obs)
             plan.validate(self.topology,
                           grid_chips=cfg.grid_shape[0] * cfg.grid_shape[1],
@@ -833,10 +983,14 @@ class ScenarioEngine:
                             (t0, t0 + m.stall_s))
             n_migs += len(migs)
             self._plans.append(plan)
+            self._plan_times.append(t0)
+            self._epochs_planned += 1
 
-            self._advance(t0, t1)
+            chaos_log = self._advance_epoch(controller, k, t0, t1, charge,
+                                            true_rates[k])
             self._sim.run_until(t1)
             self._collect_dc()
+            self._snap_link_secs()
             rates_window.append(dict(true_rates[k]))
             meta = {
                 "epoch": k, "t0": t0, "t1": t1, "plan": plan.label,
@@ -844,6 +998,9 @@ class ScenarioEngine:
                     {"service": m.service, "src": m.src, "dst": m.dst,
                      "stall_s": round(m.stall_s, 3)} for m in migs],
             }
+            if chaos_log:
+                meta["chaos"] = chaos_log
+                n_migs += sum(len(e["migrations"]) for e in chaos_log)
             # regret telemetry: controllers that score plans against a
             # forecast expose it per epoch; the realized per-epoch VoS
             # is merged in by _score once fires settle
@@ -981,6 +1138,7 @@ class ScenarioEngine:
         for svc_obj in pipe.services:
             name = svc_obj.cfg.name
             sl = ServiceLedger(service=name, **skeleton[name])
+            sl.duplicates = self._duplicates.get(name, 0)
             for f in self._fires[name]:
                 if f.state == "done" and f.site != SITE_DC:
                     sl.processed_edge += f.n_new

@@ -38,6 +38,11 @@ class ServiceLedger:
     buffered: int = 0         # in the service buffer, not yet covered
     evicted_stored: int = 0   # spilled to the post-mortem store (retained)
     evicted_lost: int = 0     # evicted with no store attached
+    # records processed TWICE under an at-least-once cold cutover (the
+    # replay re-covers records the dead source already covered). Outside
+    # the conservation partition on purpose: each record still lands in
+    # exactly one terminal bucket; this counts the extra passes.
+    duplicates: int = 0
 
     @property
     def covered(self) -> int:
@@ -85,6 +90,11 @@ class RecordLedger:
             seen.add(s.queue)
             for k in ("produced", "overflow", "unread"):
                 out[k] += getattr(s, k)
+        # at-least-once accounting: emitted only when nonzero so
+        # chaos-free totals stay byte-identical to recorded benchmarks
+        dup = sum(s.duplicates for s in self.services.values())
+        if dup:
+            out["duplicates"] = dup
         return out
 
 

@@ -90,6 +90,15 @@ class EpochObservation:
     down_oracle: Dict[str, bool]
     realized_window: List[Dict[str, Dict]] = dataclasses.field(
         default_factory=list)
+    # realized chaos telemetry (strictly about the past / the instant):
+    # which sites' links are partitioned right now (device up, link
+    # dead — distinct from down_now), and per completed epoch the mean
+    # uplink serialization seconds per transfer at each site (a
+    # straggling link shows up here, and only here)
+    partitioned_now: Dict[str, bool] = dataclasses.field(
+        default_factory=dict)
+    link_secs_window: List[Dict[str, float]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def rates_prev(self) -> Optional[Dict[str, float]]:

@@ -37,6 +37,7 @@ import json
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro import hardware as hw
+from repro.chaos.spec import ChaosSpec
 from repro.online import drift as _drift
 from repro.online.fleet import FleetSpec, SiteSpec
 from repro.pipeline.composition import Pipeline
@@ -199,6 +200,10 @@ class ScenarioSpec:
     grid_shape: Tuple[int, int] = (hw.POD_X, hw.POD_Y)
     migration_warmup_s: Optional[float] = None
     state_bytes_per_record: float = 16.0
+    # unplanned faults (crashes / partitions / straggling links) plus
+    # the migration + ledger semantics applied under them; None keeps
+    # every chaos code path dormant (bit-identical runs)
+    chaos: Optional[ChaosSpec] = None
 
     # ------------------------------------------------------------- queries
     def service_names(self) -> List[str]:
@@ -249,6 +254,8 @@ class ScenarioSpec:
         for f in self.farms:
             if f.n_things < 1:
                 raise ValueError(f"farm {f.queue!r}: n_things < 1")
+        if self.chaos is not None:
+            self.chaos.validate(sorted(site_names))
 
     def fleet_spec(self) -> FleetSpec:
         """The fleet topology: a :class:`HierFleetSpec` when regions
@@ -290,6 +297,8 @@ class ScenarioSpec:
         kw: Dict[str, Any] = {}
         if self.migration_warmup_s is not None:
             kw["migration_warmup_s"] = self.migration_warmup_s
+        if self.chaos is not None:
+            kw["chaos"] = self.chaos
         return EngineConfig(
             fleet=self.fleet_spec(),
             horizon_s=self.horizon_s, epoch_s=self.epoch_s,
@@ -367,7 +376,9 @@ class ScenarioSpec:
             mxu_efficiency=d.get("mxu_efficiency", 0.5),
             grid_shape=tuple(d.get("grid_shape", (hw.POD_X, hw.POD_Y))),
             migration_warmup_s=d.get("migration_warmup_s"),
-            state_bytes_per_record=d.get("state_bytes_per_record", 16.0))
+            state_bytes_per_record=d.get("state_bytes_per_record", 16.0),
+            chaos=(ChaosSpec.from_dict(d["chaos"])
+                   if d.get("chaos") else None))
 
     @classmethod
     def from_json(cls, s: str) -> "ScenarioSpec":
@@ -434,6 +445,16 @@ class ScenarioBuilder:
     def outage(self, site: str, down_s: float, up_s: float
                ) -> "ScenarioBuilder":
         self._outages.setdefault(site, []).append((down_s, up_s))
+        return self
+
+    def chaos(self, spec: Optional[ChaosSpec] = None, **kw
+              ) -> "ScenarioBuilder":
+        """Attach unplanned faults: a prebuilt :class:`ChaosSpec`, or
+        its fields as keywords (``crashes=``, ``partitions=``,
+        ``straggles=``, ``migration=``, ``ledger_mode=``, ...)."""
+        if spec is not None and kw:
+            raise ValueError("pass a ChaosSpec or fields, not both")
+        self._kw["chaos"] = spec if spec is not None else ChaosSpec(**kw)
         return self
 
     def region(self, name: str, *sites: str,

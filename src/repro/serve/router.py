@@ -69,30 +69,45 @@ class PlacementRouter:
         self._ship_state = ship_state
         self.warmup_s = warmup_s
         self._plans: List[PlacementPlan] = []
+        self._epoch_plan: List[int] = []    # epoch -> index into _plans
         self._stalls: Dict[str, List[Tuple[float, float]]] = {}
 
     # ------------------------------------------------------------- schedule
     def push_plan(self, plan: PlacementPlan, t0: float,
-                  charge: bool = True) -> List[ServiceMigration]:
+                  charge: bool = True, epoch: Optional[int] = None,
+                  migrations: Optional[List] = None
+                  ) -> List[ServiceMigration]:
         """Adopt ``plan`` for the epoch starting at ``t0``. Site moves
         ship operator state over the contended uplink and stall the
         service for transfer + warm-up (cost math from
-        ``repro.core.elastic``, identical to the engine)."""
-        migs: List[ServiceMigration] = []
-        if self._plans:
-            def _xfer(src: str, dst: str, nbytes: float) -> float:
-                if not charge:
-                    return 0.0
-                return self._ship_state(src, dst, nbytes, t0) - t0
-            migs = plan_replacement(self._plans[-1].assignments,
-                                    plan.assignments,
-                                    self._state_bytes, _xfer,
-                                    warmup_s=self.warmup_s)
-            if charge:
-                for m in migs:
-                    self._stalls.setdefault(m.service, []).append(
-                        (t0, t0 + m.stall_s))
+        ``repro.core.elastic``, identical to the engine).
+
+        Mid-epoch chaos re-plans pass ``epoch`` (the epoch being
+        overridden: fires dispatched after the push route under the new
+        plan) and ``migrations`` (pre-computed checkpoint-aware
+        :class:`~repro.chaos.migrate.ChaosMigration` costs, which
+        replace the raw-state epoch-boundary model)."""
+        migs: List[ServiceMigration] = migrations
+        if migrations is None:
+            migs = []
+            if self._plans:
+                def _xfer(src: str, dst: str, nbytes: float) -> float:
+                    if not charge:
+                        return 0.0
+                    return self._ship_state(src, dst, nbytes, t0) - t0
+                migs = plan_replacement(self._plans[-1].assignments,
+                                        plan.assignments,
+                                        self._state_bytes, _xfer,
+                                        warmup_s=self.warmup_s)
+        if charge:
+            for m in migs:
+                self._stalls.setdefault(m.service, []).append(
+                    (t0, t0 + m.stall_s))
         self._plans.append(plan)
+        if epoch is None:
+            self._epoch_plan.append(len(self._plans) - 1)
+        else:
+            self._epoch_plan[epoch] = len(self._plans) - 1
         return migs
 
     @property
@@ -100,7 +115,8 @@ class PlacementRouter:
         return self._plans
 
     def placement(self, svc: str, epoch: int) -> ServicePlacement:
-        return self._plans[min(epoch, len(self._plans) - 1)].placement(svc)
+        i = self._epoch_plan[min(epoch, len(self._epoch_plan) - 1)]
+        return self._plans[i].placement(svc)
 
     def site(self, svc: str, epoch: int) -> str:
         return self.placement(svc, epoch).site

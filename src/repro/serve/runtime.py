@@ -47,6 +47,8 @@ from typing import (AsyncIterator, Callable, Dict, List, Mapping, Optional,
 
 import numpy as np
 
+from repro.chaos.inject import ChaosTimeline, FaultObservation
+from repro.chaos.migrate import plan_chaos_migrations
 from repro.core.elastic import ServiceMigration
 from repro.online.fleet import Fleet
 from repro.pipeline.adapters import StageAdapter
@@ -190,7 +192,13 @@ class ServeRuntime:
         pipe, self._fresh_pipe = self._fresh_pipe or self.build(), None
         staps, qtaps = tap_pipeline(pipe)
         clock = VirtualClock(settle_rounds=self.serve.settle_rounds)
-        fleet = Fleet(cfg.fleet, self.outages)
+        timeline = (ChaosTimeline.compile(
+            cfg.chaos, cfg.fleet.site_names, cfg.horizon_s, self.epochs)
+            if cfg.chaos is not None else None)
+        fleet = Fleet(cfg.fleet, self.outages, chaos=timeline)
+        self._duplicates: Dict[str, int] = {}
+        link_snap = {s: (0.0, 0) for s in cfg.fleet.site_names}
+        link_secs: List[Dict[str, float]] = []
         shaper = UplinkShaper(fleet)
         router = PlacementRouter(
             cost=self.cost,
@@ -256,7 +264,10 @@ class ServeRuntime:
                                   else {s: 1.0 for s in self.order}),
                     down_oracle={s: any(d < t1 and u > t0
                                         for d, u in fleet.site(s).outages)
-                                 for s in cfg.fleet.site_names})
+                                 for s in cfg.fleet.site_names},
+                    partitioned_now={s: fleet.site(s).partitioned_at(t0)
+                                     for s in cfg.fleet.site_names},
+                    link_secs_window=[dict(d) for d in link_secs])
                 plan = controller.decide(obs)
                 plan.validate(self.topology,
                               grid_chips=cfg.grid_shape[0]
@@ -270,7 +281,48 @@ class ServeRuntime:
                     plan, t0, charge=charge)
                 n_migs += len(migs)
 
+                # mid-epoch chaos reaction: cut the epoch at realized
+                # fault boundaries so a chaos-aware controller can push
+                # an emergency plan (fires dispatched after the push
+                # route under it); the controller sees only the realized
+                # world, never the fault schedule
+                chaos_log: List[Dict] = []
+                react = (timeline is not None
+                         and getattr(controller, "decide_fault", None)
+                         is not None)
+                for T in (timeline.boundaries(t0, t1) if react else []):
+                    await clock.advance_past(T)
+                    fobs = FaultObservation(
+                        t=T, epoch=k,
+                        down_now={s: fleet.site(s).failed_at(T)
+                                  for s in cfg.fleet.site_names},
+                        partitioned_now={s: fleet.site(s).partitioned_at(T)
+                                         for s in cfg.fleet.site_names},
+                        straggle_now={s: fleet.site(s).straggle_factor(T)
+                                      for s in cfg.fleet.site_names},
+                        events=timeline.events_at(T))
+                    plan2 = controller.decide_fault(fobs)
+                    if plan2 is None:
+                        continue
+                    entry = self._adopt_replan(
+                        plan2, T, k, fobs, charge, router, fleet, shaper,
+                        telemetry,
+                        rates_window[-1] if rates_window else {})
+                    chaos_log.append(entry)
+                    n_migs += len(entry["migrations"])
+
                 await clock.advance_past(t1)
+                # close the epoch's uplink telemetry window: mean
+                # serialization seconds per transfer at each site
+                window: Dict[str, float] = {}
+                for s in cfg.fleet.site_names:
+                    site = fleet.site(s)
+                    b0, n0 = link_snap[s]
+                    db = site.link_busy_s - b0
+                    dn = site.link_transfers - n0
+                    link_snap[s] = (site.link_busy_s, site.link_transfers)
+                    window[s] = db / dn if dn > 0 else 0.0
+                link_secs.append(window)
                 rates_window.append(telemetry.measured_rates(k))
                 meta = {
                     "epoch": k, "t0": t0, "t1": t1, "plan": plan.label,
@@ -280,6 +332,8 @@ class ServeRuntime:
                     "rates_measured": {s: round(r, 6) for s, r
                                        in rates_window[-1].items()},
                 }
+                if chaos_log:
+                    meta["chaos"] = chaos_log
                 attach_forecast(controller, k, meta)
                 epoch_meta.append(meta)
                 yield meta
@@ -300,6 +354,75 @@ class ServeRuntime:
 
         self._result = self._score(pipe, staps, qtaps, fleet, router,
                                    telemetry, epoch_meta, n_migs, controller)
+
+    # ---------------------------------------------------------- chaos path
+    def _adopt_replan(self, plan: PlacementPlan, T: float, k: int,
+                      fobs, charge: bool, router: PlacementRouter,
+                      fleet: Fleet, shaper, telemetry: ServeTelemetry,
+                      rates_k: Dict[str, float]) -> Dict:
+        """Adopt an emergency mid-epoch plan at time ``T`` with the
+        checkpoint-aware live/cold migration semantics (the serve twin
+        of ``ScenarioEngine._adopt_replan``: measured fire counts stand
+        in for the DES fire trace)."""
+        plan.validate(self.topology,
+                      grid_chips=self.cfg.grid_shape[0]
+                      * self.cfg.grid_shape[1],
+                      sites=self.all_sites)
+        bad = self._site_ram_ok(plan)
+        if bad is not None:
+            raise ValueError(f"epoch {k}: infeasible fault re-plan: {bad}")
+        chaos = self.cfg.chaos
+        ck = max(1, chaos.checkpoint_every)
+        old = router.plans[-1]
+
+        def _replay_records(svc: str) -> int:
+            fires = telemetry.fires[svc]
+            i_t = len(fires)
+            return sum(f.n_new for f in fires[(i_t // ck) * ck:i_t])
+
+        def _replay_time(svc: str, n: int, dst: str) -> float:
+            if dst == SITE_DC:
+                return router.dc_cost(svc, n, plan.placement(svc))[0]
+            return fleet.site(dst).node.fire_time(
+                n, self.profiles[svc].flops_per_record)
+
+        def _drain(svc: str) -> float:
+            src = old.site(svc)
+            if src == SITE_DC:
+                return 0.0
+            return max(0.0, fleet.site(src).node.busy_until - T)
+
+        def _src_dead(s: str) -> bool:
+            if s == SITE_DC:
+                return False
+            site = fleet.site(s)
+            return site.crashed_at(T) or site.partitioned_at(T)
+
+        def _local_origin(svc: str, dst: str) -> bool:
+            return (not self.topology[svc]
+                    and self.cfg.fleet.farm_site(
+                        self.services_info[svc].queue) == dst)
+
+        def _ckpt_bytes(svc: str) -> float:
+            return (self.services_info[svc].buffer_budget
+                    * chaos.checkpoint_bytes_per_record)
+
+        migs = plan_chaos_migrations(
+            chaos, old.assignments, plan.assignments, T,
+            src_dead=_src_dead, ship=shaper.ship_state,
+            state_bytes=self._state_bytes, ckpt_bytes=_ckpt_bytes,
+            replay_records=_replay_records, replay_time=_replay_time,
+            rate_rps=lambda svc: rates_k.get(svc, 0.0),
+            drain_s=_drain, dc_site=SITE_DC, local_origin=_local_origin,
+            warmup_s=self.cfg.migration_warmup_s, charge=charge)
+        for m in migs:
+            if m.duplicates:
+                self._duplicates[m.service] = (
+                    self._duplicates.get(m.service, 0) + m.duplicates)
+        router.push_plan(plan, T, charge=charge, epoch=k, migrations=migs)
+        return {"t": round(T, 6), "plan": plan.label,
+                "trigger": list(fobs.events),
+                "migrations": [m.digest() for m in migs]}
 
     # -------------------------------------------------------------- score
     def _score(self, pipe, staps, qtaps, fleet: Fleet,
@@ -394,6 +517,7 @@ class ServeRuntime:
                 buffered=len(buf_ids - covered_ids),
                 **{("evicted_stored" if svc_obj.cfg.store is not None
                     else "evicted_lost"): len(evicted_unc)})
+            sl.duplicates = getattr(self, "_duplicates", {}).get(name, 0)
             for f in telemetry.fires[name]:
                 if not f.done:
                     continue        # shed/unfired: records roll or buffer

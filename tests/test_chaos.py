@@ -1,0 +1,340 @@
+"""Chaos & migration realism: withdrawable FIFO admissions, step-keyed
+failure injection, restart determinism, partition-vs-outage telemetry,
+ledger-mode accounting, and chaos-disabled bit-identity."""
+import json
+
+import pytest
+
+from repro.chaos import (ChaosController, ChaosSpec, ChaosTimeline,
+                         LinkStraggle, Partition, SiteCrash)
+from repro.checkpoint import (CheckpointManager, FailureInjector,
+                              run_with_restarts)
+from repro.online import StaticController
+from repro.online.fleet import LinkQueue
+from repro.placement import PlacementPlan
+from repro.placement.edge import EdgeSpec
+from repro.placement.network import LinkSpec
+from repro.scenario import RateSpec, ScenarioSpec, scenario
+
+
+# ---------------------------------------------------------------------------
+# LinkQueue withdraw: exact FIFO restoration
+# ---------------------------------------------------------------------------
+def test_linkqueue_withdraw_exact_restore():
+    q = LinkQueue()
+    q.admit(0.0, 2.0)
+    tok = q.last_token
+    q.admit(1.0, 3.0)           # queues behind the first: waits 1 s
+    assert q.busy_until == 5.0 and q.queue_wait_s == 1.0 and q.transfers == 2
+    assert q.withdraw(tok)
+    # exactly as if only the second admission ever happened
+    assert q.busy_until == 4.0 and q.queue_wait_s == 0.0 and q.transfers == 1
+    assert not q.withdraw(tok)          # idempotent: already withdrawn
+
+    fresh = LinkQueue()
+    fresh.admit(1.0, 3.0)
+    assert (q.busy_until, q.queue_wait_s, q.transfers) == \
+        (fresh.busy_until, fresh.queue_wait_s, fresh.transfers)
+
+
+def test_linkqueue_withdraw_last_skips_withdrawn():
+    q = LinkQueue()
+    q.admit(0.0, 1.0)
+    q.admit(0.0, 1.0)
+    assert q.withdraw_last()            # withdraws the second
+    assert q.withdraw_last()            # then the first
+    assert not q.withdraw_last()        # nothing active left
+    assert q.busy_until == 0.0 and q.transfers == 0
+
+
+# ---------------------------------------------------------------------------
+# ChaosSpec: round-trip + validation
+# ---------------------------------------------------------------------------
+def test_chaos_spec_roundtrip():
+    spec = ChaosSpec(
+        crashes=(SiteCrash(site="gw-a", at_s=100.0, recover_s=400.0),),
+        partitions=(Partition(site="gw-b", at_s=50.0, heal_s=200.0),),
+        straggles=(LinkStraggle(site="gw-a", at_s=500.0, until_s=700.0,
+                                factor=4.0),),
+        migration="live", ledger_mode="at_least_once",
+        checkpoint_every=8, p_crash=0.01, seed=7)
+    d = json.loads(json.dumps(spec.to_dict()))
+    assert ChaosSpec.from_dict(d) == spec
+
+
+@pytest.mark.parametrize("bad", [
+    dict(migration="teleport"),
+    dict(ledger_mode="maybe_once"),
+    dict(crashes=(SiteCrash(site="nope", at_s=0.0, recover_s=1.0),)),
+    dict(crashes=(SiteCrash(site="gw-a", at_s=5.0, recover_s=5.0),)),
+    dict(straggles=(LinkStraggle(site="gw-a", at_s=0.0, until_s=1.0,
+                                 factor=0.5),)),
+])
+def test_chaos_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        ChaosSpec(**bad).validate(["gw-a", "gw-b"])
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector: step-keyed, replay-stable, fire-once
+# ---------------------------------------------------------------------------
+def test_failure_injector_step_keyed():
+    a = FailureInjector(p_fail=0.3, seed=42)
+    b = FailureInjector(p_fail=0.3, seed=42)
+    # a consumes draws out of order; b in order — step-keyed draws make
+    # consumption order irrelevant (the old stateful-RNG bug made a
+    # restart replay probe DIFFERENT coins than the uninterrupted run)
+    order_a = [5, 1, 3, 0, 2, 4]
+    fired_a = {s for s in order_a if a.should_fail(s)}
+    fired_b = {s for s in range(6) if b.should_fail(s)}
+    assert fired_a == fired_b == set(a.fail_times(6)) == set(b.fail_times(6))
+    # fire-once: a replayed step succeeds (the node was replaced)
+    for s in fired_a:
+        assert not a.should_fail(s)
+    # fail_times is pure: consuming draws doesn't change it
+    assert a.fail_times(6) == FailureInjector(p_fail=0.3, seed=42).fail_times(6)
+
+
+def test_chaos_timeline_random_crashes_deterministic():
+    spec = ChaosSpec(p_crash=0.5, seed=3)
+    epochs = [(0.0, 300.0), (300.0, 600.0), (600.0, 900.0)]
+    t1 = ChaosTimeline.compile(spec, ["gw-a", "gw-b"], 900.0, epochs)
+    t2 = ChaosTimeline.compile(spec, ["gw-a", "gw-b"], 900.0, epochs)
+    for s in ("gw-a", "gw-b"):
+        assert t1.crash_windows(s) == t2.crash_windows(s)
+    assert t1.any_faults()      # p=0.5 over 6 coins: seed 3 fires
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts: history regression + determinism under failure
+# ---------------------------------------------------------------------------
+def _toy_runner():
+    import jax.numpy as jnp
+
+    def one_step(state, step):
+        return ({"w": state["w"] + jnp.float32(step + 1)},
+                {"w0": float(state["w"])})
+    return one_step
+
+
+def test_restart_history_strictly_increasing(tmp_path):
+    """Regression: a restart used to leave already-replayed steps in the
+    history, duplicating entries. History must match the uninterrupted
+    run exactly."""
+    import jax.numpy as jnp
+    init = {"w": jnp.float32(0.0)}
+    mgr = CheckpointManager(str(tmp_path / "a"), save_every=3,
+                            async_write=False)
+    _, hist, restarts = run_with_restarts(
+        init_state=init, train_one_step=_toy_runner(), ckpt_manager=mgr,
+        n_steps=9, injector=FailureInjector(fail_steps=[4, 7]))
+    assert restarts == 2
+    steps = [s for s, _ in hist]
+    assert steps == list(range(9))      # no duplicates, no gaps
+    mgr_c = CheckpointManager(str(tmp_path / "c"), save_every=3,
+                              async_write=False)
+    _, hist_clean, _ = run_with_restarts(
+        init_state=init, train_one_step=_toy_runner(), ckpt_manager=mgr_c,
+        n_steps=9, injector=FailureInjector())
+    assert hist == hist_clean
+
+
+def test_restart_under_failure_deterministic(tmp_path):
+    """Same seed -> bit-identical history and final state across two
+    independent runs through random injected failures."""
+    import jax.numpy as jnp
+    init = {"w": jnp.float32(0.0)}
+    results = []
+    for tag in ("a", "b"):
+        mgr = CheckpointManager(str(tmp_path / tag), save_every=2,
+                                async_write=False)
+        s, h, r = run_with_restarts(
+            init_state=init, train_one_step=_toy_runner(), ckpt_manager=mgr,
+            n_steps=12, injector=FailureInjector(p_fail=0.25, seed=9))
+        results.append((float(s["w"]), h, r))
+    assert results[0] == results[1]
+    assert results[0][2] > 0            # the schedule actually fired
+    assert float(results[0][0]) == sum(range(1, 13))
+
+
+def test_ckpt_manager_owns_executor(tmp_path):
+    """Regression: the async writer used to be a module-level default-arg
+    ThreadPoolExecutor shared by every manager and never shut down."""
+    m1 = CheckpointManager(str(tmp_path / "1"), save_every=1)
+    m2 = CheckpointManager(str(tmp_path / "2"), save_every=1)
+    m1.maybe_save(1, {"w": 1.0})
+    m2.maybe_save(1, {"w": 2.0})
+    assert m1._executor is not None and m2._executor is not None
+    assert m1._executor is not m2._executor
+    m1.finalize()
+    assert m1._executor is None         # shut down and released
+    assert m2._executor is not None     # m2 unaffected
+    m2.finalize()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: shared tiny scenario
+# ---------------------------------------------------------------------------
+def _mini_spec(chaos=None, outage=None) -> ScenarioSpec:
+    b = (scenario("chaos_mini")
+         .site("gw-a", edge=EdgeSpec(name="gw-a", throughput_rps=2000.0,
+                                     active_power_w=1.0,
+                                     energy_per_record_j=50e-6),
+               link=LinkSpec(uplink_bps=15e3, downlink_bps=2e6, rtt_s=0.040,
+                             record_bytes=64.0, compression=0.25))
+         .site("gw-b", edge=EdgeSpec(name="gw-b", throughput_rps=1500.0,
+                                     flops_per_s=15e9, active_power_w=1.2,
+                                     energy_per_record_j=60e-6),
+               link=LinkSpec(uplink_bps=12e3, downlink_bps=2e6, rtt_s=0.060,
+                             record_bytes=64.0, compression=0.25))
+         .horizon(1200.0).epochs(300.0).dc(dc_step_floor_s=2e-3)
+         .farm(n_things=6, seed=11, site="gw-a",
+               rate=RateSpec.constant(4.0)))
+    (b.service("agg", queue="neubotspeed", column="download_speed",
+               agg="max", width_s=120, slide_s=30, buffer_budget=8192)
+     .slo(soft_latency_s=2.0, hard_latency_s=10.0,
+          soft_energy_j=0.3, hard_energy_j=3.0)
+     .profile(flops_per_record=2e3))
+    if outage is not None:
+        b.outage("gw-a", *outage)
+    if chaos is not None:
+        b.chaos(chaos)
+    return b.build()
+
+
+def _static_a():
+    return StaticController(PlacementPlan.all_edge(["agg"], site="gw-a"),
+                            label="static:pin-a")
+
+
+def _chaos_ctrl(seed=0):
+    return ChaosController(chips_options=(4,), window=1, switch_margin=0.02,
+                           seed=seed, prior_rates={"agg": 8.0})
+
+
+def test_chaos_disabled_bit_identity():
+    """A spec without chaos and the same engine with every chaos code
+    path dormant must produce the identical result."""
+    r0 = _mini_spec().compile().run(_static_a())
+    r1 = _mini_spec(chaos=None).compile().run(_static_a())
+    assert r0.vos == r1.vos
+    assert r0.ledger.totals() == r1.ledger.totals()
+    assert r0.summary()["epochs"] == r1.summary()["epochs"]
+    assert "duplicates" not in r0.ledger.totals()
+
+
+def test_partition_is_not_outage():
+    """A partition downs the link, not the device: down_now stays False,
+    partitioned_now flips, and local edge work still completes. The
+    oracle (down_oracle) stays blind to chaos — it reads only the
+    scheduled outage windows."""
+    ch = ChaosSpec(partitions=(Partition(site="gw-a", at_s=350.0,
+                                         heal_s=850.0),))
+    cs = _mini_spec(chaos=ch).compile()
+    seen = {}
+
+    class Probe(StaticController):
+        def decide(self, obs):
+            seen[obs.epoch] = (dict(obs.down_now), dict(obs.partitioned_now),
+                               dict(obs.down_oracle))
+            return super().decide(obs)
+
+    r = cs.run(Probe(PlacementPlan.all_edge(["agg"], site="gw-a"),
+                     label="static:pin-a"))
+    down, part, oracle = seen[2]        # t0=600: mid-partition
+    assert part["gw-a"] and not down["gw-a"]
+    assert not oracle["gw-a"]           # planning stays blind to chaos
+    # device alive: the all-local plan kept processing through it
+    assert r.ledger.conserved()
+    assert r.ledger.totals()["processed_edge"] > 0
+    # scheduled outage, by contrast, is oracle-visible AND downs the device
+    cs2 = _mini_spec(outage=(350.0, 850.0)).compile()
+    seen.clear()
+    cs2.run(Probe(PlacementPlan.all_edge(["agg"], site="gw-a"),
+                  label="static:pin-a"))
+    down2, part2, oracle2 = seen[2]
+    assert down2["gw-a"] and oracle2["gw-a"] and not part2["gw-a"]
+
+
+def test_crash_telemetry_realized_only():
+    """An unplanned crash surfaces in down_now once it fires — never in
+    down_oracle."""
+    ch = ChaosSpec(crashes=(SiteCrash(site="gw-a", at_s=350.0,
+                                      recover_s=850.0),))
+    cs = _mini_spec(chaos=ch).compile()
+    seen = {}
+
+    class Probe(StaticController):
+        def decide(self, obs):
+            seen[obs.epoch] = (dict(obs.down_now), dict(obs.down_oracle))
+            return super().decide(obs)
+
+    cs.run(Probe(PlacementPlan.all_edge(["agg"], site="gw-b"),
+                 label="static:pin-b"))
+    assert seen[2][0]["gw-a"] and not seen[2][1]["gw-a"]
+    assert not seen[0][0]["gw-a"]       # nothing before onset
+
+
+def _crash_spec(mode):
+    return ChaosSpec(
+        crashes=(SiteCrash(site="gw-a", at_s=350.0, recover_s=1000.0),),
+        migration="cold", ledger_mode=mode)
+
+
+def test_ledger_exactly_once():
+    """Exactly-once draining: conservation holds and nothing is
+    double-processed (no duplicates key in the totals)."""
+    cs = _mini_spec(chaos=_crash_spec("exactly_once")).compile()
+    r = cs.run(_chaos_ctrl())
+    assert r.summary()["epochs"][1].get("chaos"), "no mid-epoch re-plan fired"
+    assert r.ledger.conserved()
+    assert "duplicates" not in r.ledger.totals()
+
+
+def test_ledger_at_least_once_duplicates_accounted():
+    """At-least-once cutover: every replayed record is double-processed
+    and every one of them is accounted — duplicates == the replay counts
+    the migrations declared, and conservation still holds (duplicates
+    sit outside the partition by design)."""
+    cs = _mini_spec(chaos=_crash_spec("at_least_once")).compile()
+    r = cs.run(_chaos_ctrl())
+    replans = [e for ep in r.summary()["epochs"]
+               for e in ep.get("chaos", ())]
+    declared = sum(m["replay_records"] for e in replans
+                   for m in e["migrations"] if m["duplicates"])
+    assert declared > 0
+    assert r.ledger.totals()["duplicates"] == declared
+    assert r.ledger.conserved()
+
+
+def test_chaos_run_deterministic():
+    """Two same-seed runs under chaos are bit-identical: vos, ledger,
+    and the full epoch meta (including migration digests)."""
+    ra = _mini_spec(chaos=_crash_spec("exactly_once")).compile() \
+        .run(_chaos_ctrl(seed=5))
+    rb = _mini_spec(chaos=_crash_spec("exactly_once")).compile() \
+        .run(_chaos_ctrl(seed=5))
+    assert ra.vos == rb.vos
+    assert ra.ledger.totals() == rb.ledger.totals()
+    assert ra.summary()["epochs"] == rb.summary()["epochs"]
+
+
+def test_straggle_slows_but_conserves():
+    """A straggling uplink inflates transfer serialization (visible in
+    link_secs_window) without losing records."""
+    ch = ChaosSpec(straggles=(LinkStraggle(site="gw-a", at_s=300.0,
+                                           until_s=900.0, factor=6.0),))
+    cs = _mini_spec(chaos=ch).compile()
+    seen = {}
+
+    class Probe(StaticController):
+        def decide(self, obs):
+            seen[obs.epoch] = [dict(w) for w in obs.link_secs_window]
+            return super().decide(obs)
+
+    r = cs.run(Probe(PlacementPlan.all_dc(["agg"], chips=4),
+                     label="static:dc"))
+    assert r.ledger.conserved()
+    windows = seen[max(seen)]
+    quiet, slow = windows[0]["gw-a"], windows[1]["gw-a"]
+    assert quiet > 0 and slow > quiet * 3   # factor-6 straggle visible
